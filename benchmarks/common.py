@@ -1,0 +1,64 @@
+"""Shared benchmark plumbing: graph set, partitioner registry, CSV output."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import PARTITIONERS
+from repro.graph.generate import make_graph
+
+# Benchmark-scale analogues of the paper's datasets (Table I mapping in
+# DESIGN.md). Sizes keep the full suite CPU-friendly; pass --full for 4x.
+GRAPHS = {
+    "livejournal_like": dict(name="livejournal_like", workers=12),
+    "twitter_like": dict(name="twitter_like", workers=32),
+    "road_like": dict(name="road_like", workers=12),
+}
+
+PARTS = ["ebg", "dbh", "cvc", "ne", "metis"]
+
+
+_GRAPH_CACHE: dict = {}
+_PART_CACHE: dict = {}
+
+
+def load_graph(key: str, scale: float = 1.0):
+    spec = GRAPHS[key]
+    ck = (key, scale)
+    if ck in _GRAPH_CACHE:
+        return _GRAPH_CACHE[ck], spec["workers"]
+    kw = {}
+    if scale != 1.0:
+        from repro.graph.generate import REGISTRY
+
+        base = REGISTRY[spec["name"]][1]
+        if key == "road_like":
+            kw = dict(side=max(32, int(base["side"] * scale ** 0.5)))
+        else:
+            import math
+
+            v = max(4096, 2 ** round(math.log2(base["num_vertices"] * scale)))
+            kw = dict(num_vertices=v, num_edges=int(base["num_edges"] * scale))
+    g = make_graph(spec["name"], **kw)
+    _GRAPH_CACHE[ck] = g
+    return g, spec["workers"]
+
+
+def get_partition(key: str, scale: float, name: str, p: int):
+    """Partition results cached across benchmark modules."""
+    ck = (key, scale, name, p)
+    if ck not in _PART_CACHE:
+        g, _ = load_graph(key, scale)
+        _PART_CACHE[ck] = PARTITIONERS[name](g, p)
+    return _PART_CACHE[ck]
+
+
+def timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    return out, time.time() - t0
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}")

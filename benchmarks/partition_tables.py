@@ -1,0 +1,68 @@
+"""Paper Tables I & III + §V-A partition overhead.
+
+Table I:   statistics of the benchmark graphs (V, E, avg degree, eta).
+Table III: edge/vertex imbalance factors + replication factor per
+           partitioner per graph.
+Overhead:  wall-clock partition time per algorithm.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import GRAPHS, PARTS, get_partition, load_graph
+from repro.core import PARTITIONERS, partition_metrics
+from repro.graph.generate import estimate_eta
+
+
+def table1(scale: float = 1.0):
+    print("\n== Table I: graph statistics ==")
+    print(f"{'graph':18} {'|V|':>10} {'|E|':>10} {'avg deg':>8} {'eta':>6}")
+    rows = {}
+    for key in GRAPHS:
+        g, _ = load_graph(key, scale)
+        eta = estimate_eta(g)
+        print(f"{key:18} {g.num_vertices:>10} {g.num_edges:>10} "
+              f"{g.num_edges/g.num_vertices:>8.2f} {eta:>6.2f}")
+        rows[key] = dict(V=g.num_vertices, E=g.num_edges, eta=round(eta, 2))
+    return rows
+
+
+def table3(scale: float = 1.0, partitioners=PARTS):
+    print("\n== Table III: partition metrics (edge-imb/vertex-imb | rep factor) ==")
+    out = {}
+    for key in GRAPHS:
+        g, p = load_graph(key, scale)
+        row = {}
+        for name in partitioners:
+            t0 = time.time()
+            res = get_partition(key, scale, name, p)
+            dt = time.time() - t0
+            m = partition_metrics(g, res)
+            row[name] = dict(**m.row(), partition_s=round(dt, 2))
+        out[key] = row
+        cells = "  ".join(
+            f"{n}:{row[n]['edge_imbalance']:.2f}/{row[n]['vertex_imbalance']:.2f}|{row[n]['replication_factor']:.2f}"
+            for n in partitioners
+        )
+        print(f"{key:18} p={p:<3} {cells}")
+    return out
+
+
+def overhead_table(results):
+    print("\n== Partition overhead (seconds) ==")
+    for gkey, row in results.items():
+        cells = "  ".join(f"{n}:{row[n]['partition_s']:.2f}" for n in row)
+        print(f"{gkey:18} {cells}")
+
+
+def main(scale: float = 1.0):
+    table1(scale)
+    res = table3(scale)
+    overhead_table(res)
+    return res
+
+
+if __name__ == "__main__":
+    main()

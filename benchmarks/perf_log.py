@@ -1,0 +1,106 @@
+"""§Perf hillclimb driver + log renderer.
+
+Runs the named plans on the three selected cells (one dryrun subprocess
+per plan — each needs a fresh 512-device jax), collects the records, and
+renders the hypothesis→change→before→after log for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+CELLS = [
+    # (arch, shape, [plans in hillclimb order], why chosen)
+    ("jamba_1_5_large", "train_4k", ["vp", "ep+vp", "ep+vp+sp"],
+     "most collective-bound baseline"),
+    ("kimi_k2", "train_4k", ["vp", "vp+cap1", "ep+cap1"],
+     "paper-representative: 384-expert EP == power-law placement"),
+    ("llama3_2_3b", "decode_32k", ["don", "don+repl"],
+     "worst roofline fraction (memory-bound decode)"),
+]
+
+HYPOTHESES = {
+    "vp": "the naive loss take_along_axis all-gathers full [B,S,V] logits "
+          "across the vocab shards; a one-hot contraction keeps the gather "
+          "local → collective term should collapse (napkin: logits "
+          "all-gather ≈ B·S·V·4B·15/16 per chip ≫ everything else)",
+    "ep+vp": "REFUTED vp alone: the collective is NOT the logits gather — "
+             "it is GSPMD lowering the MoE dispatch scatter as an all-reduce "
+             "of the full [E,C,d] buffer (~70 GB/op). Manual shard_map EP: "
+             "tokens are model-replicated, each expert shard gathers its "
+             "tokens LOCALLY, combine = one [T_loc,d] psum (≈1000x fewer B)",
+    "ep+vp+sp": "with collectives fixed, memory dominates; sequence-parallel "
+                "activations shard the S dim over `model` between layers → "
+                "activation bytes drop up to 16x",
+    "ep+cap1": "same shard_map EP dispatch + capacity 1.0; kimi's 1815s "
+               "collective was ~entirely the dispatch all-reduce "
+               "(napkin: 61 layers x ~70 GB x ring ≈ 90 TB/chip)",
+    "vp+cap1": "capacity 1.25→1.0 cuts the [E,C,d] dispatch buffer and its "
+               "collectives by 20% on top of vp",
+    "vp+cap1+bf16g": "bf16 gradient all-reduce halves the DP-gradient "
+                     "share of the collective term",
+    "don": "donating the KV cache aliases the dynamic-update-slice "
+           "in-place → halves cache bytes (no copy of the full cache)",
+    "don+repl": "weights replicated over DP axes for serving: no per-step "
+                "FSDP weight all-gathers (weights fit trivially at 3B)",
+}
+
+
+def run_plan(arch: str, shape: str, plan: str, out: str = "experiments/dryrun"):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--mesh", "pod", "--plan", plan, "--out", out]
+    r = subprocess.run(cmd, capture_output=True, text=True, timeout=3000, env=env)
+    print(r.stdout[-400:])
+    assert r.returncode == 0, r.stderr[-2000:]
+
+
+def load(arch, shape, plan, out="experiments/dryrun"):
+    p = Path(out) / f"{arch}__{shape}__sp__{plan}.json"
+    return json.loads(p.read_text()) if p.exists() else None
+
+
+def render_log(out="experiments/dryrun") -> str:
+    from benchmarks.roofline import effective_terms, roofline_fraction
+
+    lines = []
+    for arch, shape, plans, why in CELLS:
+        lines.append(f"\n### {arch} × {shape}  ({why})\n")
+        lines.append("| plan | hypothesis | compute s | memory s | collective s "
+                     "| bound | roofline frac | verdict |")
+        lines.append("|---|---|---|---|---|---|---|---|")
+        prev = None
+        for plan in ["baseline"] + plans:
+            r = load(arch, shape, plan, out)
+            if r is None:
+                continue
+            t = effective_terms(r)
+            frac = roofline_fraction(r)
+            hyp = "paper-faithful baseline" if plan == "baseline" else HYPOTHESES.get(plan, "")
+            verdict = ""
+            if prev is not None and frac is not None and prev is not None:
+                verdict = ("**confirmed**" if t["bound_s"] < prev * 0.95
+                           else ("refuted" if t["bound_s"] > prev * 1.05 else "neutral"))
+            lines.append(
+                f"| {plan} | {hyp[:80]} | {t['compute_s']:.4g} | {t['memory_s']:.4g} "
+                f"| {t['collective_s']:.4g} | {t['bound_s']:.4g} "
+                f"| {frac:.4f} | {verdict} |"
+            )
+            prev = t["bound_s"]
+    return "\n".join(lines)
+
+
+def main():
+    for arch, shape, plans, _ in CELLS:
+        for plan in plans:
+            print(f"=== {arch} × {shape} plan={plan}")
+            run_plan(arch, shape, plan)
+    print(render_log())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Fill EXPERIMENTS.md's §Roofline table and §Perf log from artifacts."""
+from __future__ import annotations
+
+from pathlib import Path
+
+from benchmarks.perf_log import render_log
+from benchmarks.roofline import load_records, render_md, table
+
+
+def main():
+    path = Path("EXPERIMENTS.md")
+    text = path.read_text()
+    recs = load_records()
+    rows = table(recs, mesh="16x16")
+    text = text.replace("<!-- ROOFLINE_TABLE -->", render_md(rows))
+    text = text.replace("<!-- PERF_LOG -->", render_log())
+    path.write_text(text)
+    print("EXPERIMENTS.md updated:", len(rows), "roofline rows")
+
+
+if __name__ == "__main__":
+    main()

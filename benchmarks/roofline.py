@@ -1,0 +1,105 @@
+"""§Roofline report: read experiments/dryrun JSONs → markdown tables.
+
+Per (arch × shape × mesh): the three roofline terms (seconds), dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS usefulness ratio, HBM/device, and the
+roofline fraction (model-flops time at peak / bound term) used as the
+perf score.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.launch.roofline import PEAK_FLOPS
+
+
+def load_records(dirpath="experiments/dryrun"):
+    recs = []
+    for p in sorted(Path(dirpath).glob("*.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def effective_terms(rec) -> dict:
+    """Bound terms with the compute term floored at MODEL_FLOPS/peak —
+    XLA's CPU cost model undercounts decode matvecs, and a program can
+    never beat its own useful-FLOPs time."""
+    mf = rec.get("model_flops_per_device") or 0.0
+    compute = max(rec["compute_s"], mf / PEAK_FLOPS)
+    terms = dict(compute_s=compute, memory_s=rec["memory_s"],
+                 collective_s=rec["collective_s"])
+    bot = max(terms, key=terms.get)
+    terms["bottleneck"] = bot.replace("_s", "")
+    terms["bound_s"] = terms[bot]
+    return terms
+
+
+def roofline_fraction(rec) -> float | None:
+    """model-useful compute time / achieved bound time (≤1; higher = closer
+    to roofline). This is the §Perf score."""
+    if not rec.get("model_flops_per_device"):
+        return None
+    t = effective_terms(rec)
+    ideal = rec["model_flops_per_device"] / PEAK_FLOPS
+    return ideal / t["bound_s"] if t["bound_s"] else None
+
+
+def table(recs, plan="baseline", mesh=None):
+    rows = []
+    for r in recs:
+        if r.get("plan", "baseline") != plan:
+            continue
+        if mesh and r["mesh"] != mesh:
+            continue
+        frac = roofline_fraction(r)
+        t = effective_terms(r)
+        rows.append(
+            dict(
+                cell=f"{r['arch']}×{r['shape']}",
+                mesh=r["mesh"],
+                compute_s=t["compute_s"],
+                memory_s=t["memory_s"],
+                collective_s=t["collective_s"],
+                bottleneck=t["bottleneck"],
+                hbm_gib=round(r.get("per_device_hbm_total", 0) / 2**30, 1),
+                useful=round(min(r.get("useful_flops_frac") or 0, 1.0), 3),
+                roofline_frac=round(frac, 4) if frac else None,
+            )
+        )
+    return rows
+
+
+def render_md(rows) -> str:
+    hdr = ("| cell | mesh | compute s | memory s | collective s | bottleneck "
+           "| HBM GiB/dev | useful | roofline frac |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['cell']} | {r['mesh']} | {r['compute_s']:.4g} | {r['memory_s']:.4g} "
+            f"| {r['collective_s']:.4g} | {r['bottleneck']} | {r['hbm_gib']} "
+            f"| {r['useful']} | {r['roofline_frac']} |"
+        )
+    return "\n".join(lines)
+
+
+def main(dirpath="experiments/dryrun"):
+    recs = load_records(dirpath)
+    rows = table(recs, mesh="16x16")
+    print(render_md(rows))
+    worst = [r for r in rows if r["roofline_frac"]]
+    worst.sort(key=lambda r: r["roofline_frac"])
+    if worst:
+        print("\nworst roofline fractions:")
+        for r in worst[:5]:
+            print(f"  {r['cell']}: {r['roofline_frac']} ({r['bottleneck']})")
+        coll = [r for r in rows if r["bottleneck"] == "collective"]
+        coll.sort(key=lambda r: -r["collective_s"])
+        print("most collective-bound:")
+        for r in coll[:5]:
+            print(f"  {r['cell']}: collective {r['collective_s']:.3f}s")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

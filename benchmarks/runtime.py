@@ -1,0 +1,101 @@
+"""Paper Figures 3 & 4: end-to-end BSP runtime of CC / PR / SSSP per
+partitioner on power-law and road-like graphs.
+
+One CPU simulates all p workers, so wall-clock of the batched engine is NOT
+parallel runtime. We report the paper's quantity with a calibrated BSP cost
+model over measured per-worker work:
+
+  T = Σ_k [ max_i(comp_i^k) + max_i(msg_i^k)·t_msg ]
+
+comp_i^k = measured edge-relaxations (inner iterations × |E_i|) × t_edge,
+with t_edge calibrated from the actual wall time of the batched compute.
+This preserves exactly what the paper measures — the imbalance penalty
+(stragglers) and the message volume — while staying hardware-honest.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import GRAPHS, PARTS, get_partition, load_graph
+from repro.core import PARTITIONERS
+from repro.graph import algorithms as alg
+from repro.graph.build import build_subgraphs
+
+T_MSG = 2.0e-7  # s per message (≈5M msgs/s/link, MPI-class small messages)
+
+
+def simulated_runtime(stats, edges_per_worker, t_edge: float) -> float:
+    """BSP parallel-time model from per-worker per-superstep work counts."""
+    iters = stats.inner_iters_per_step  # [steps, p]
+    comp = iters * edges_per_worker[None, :] * t_edge
+    # messages per worker per step are not retained per-step; approximate
+    # with the per-worker totals spread over steps proportionally to comp.
+    msg_share = stats.messages_per_worker / max(1, stats.messages_per_worker.sum())
+    msg_per_step = stats.messages_per_step[:, None] * msg_share[None, :]
+    per_step = comp.max(axis=1) + (msg_per_step * T_MSG).max(axis=1)
+    return float(per_step.sum())
+
+
+def run(scale: float = 1.0, algos=("cc", "pr", "sssp"), partitioners=PARTS):
+    out = {}
+    for key in GRAPHS:
+        g, p = load_graph(key, scale)
+        cov = np.unique(np.concatenate([np.asarray(g.src), np.asarray(g.dst)]))
+        src_v = int(cov[np.argmax(g.degrees()[cov])])
+        for algo in algos:
+            if key == "road_like" and algo == "pr":
+                continue  # paper Fig.4 shows CC/SSSP only on USARoad
+            row = {}
+            for name in partitioners:
+                res = get_partition(key, scale, name, p)
+                sub = build_subgraphs(g, res, symmetrize=(algo == "cc"))
+                edges = np.asarray(sub.edge_mask.sum(axis=1))
+                t0 = time.time()
+                if algo == "cc":
+                    _, stats = alg.connected_components(sub)
+                elif algo == "pr":
+                    _, stats = alg.pagerank(sub, g.num_vertices, num_iters=10)
+                else:
+                    _, stats = alg.sssp(sub, src_v)
+                wall = time.time() - t0
+                total_work = float((stats.inner_iters_per_step * edges[None, :]).sum())
+                t_edge = wall / max(total_work, 1.0)  # calibrate to this host
+                sim = simulated_runtime(stats, edges, t_edge)
+                row[name] = dict(sim_runtime_s=round(sim, 4), wall_s=round(wall, 2),
+                                 supersteps=stats.supersteps)
+            out[(key, algo)] = row
+            cells = "  ".join(f"{n}:{row[n]['sim_runtime_s']:.3f}s" for n in partitioners)
+            print(f"{algo.upper():4} {key:18} p={p:<3} {cells}")
+    return out
+
+
+def validate(results):
+    """Fig.3 claim: EBG fastest (or tied) on power-law; Fig.4: NE/METIS
+    competitive on road graphs."""
+    wins = 0
+    cases = 0
+    for (key, algo), row in results.items():
+        if key == "road_like":
+            continue
+        cases += 1
+        best = min(row, key=lambda n: row[n]["sim_runtime_s"])
+        if best == "ebg":
+            wins += 1
+        else:
+            margin = row["ebg"]["sim_runtime_s"] / row[best]["sim_runtime_s"]
+            if margin < 1.1:
+                wins += 1  # within 10% of the winner
+    print(f"\nEBG best-or-close on power-law: {wins}/{cases}")
+    return wins, cases
+
+
+def main(scale: float = 1.0):
+    res = run(scale)
+    validate(res)
+    return res
+
+
+if __name__ == "__main__":
+    main()

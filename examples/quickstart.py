@@ -1,0 +1,34 @@
+"""Quickstart: EBG-partition a power-law graph, run subgraph-centric CC,
+and compare the communication profile against DBH.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import dbh_partition, ebg_partition, partition_metrics
+from repro.graph import algorithms as alg
+from repro.graph.build import build_subgraphs
+from repro.graph.generate import make_graph
+
+
+def main():
+    g = make_graph("tiny_powerlaw")
+    print(f"graph: |V|={g.num_vertices} |E|={g.num_edges}")
+
+    for name, partitioner in [("EBG", ebg_partition), ("DBH", dbh_partition)]:
+        res = partitioner(g, 8)
+        m = partition_metrics(g, res)
+        sub = build_subgraphs(g, res, symmetrize=True)
+        labels, stats = alg.connected_components(sub)
+        ncc = np.unique(alg.scatter_to_global(sub, labels, g.num_vertices)).shape[0]
+        print(
+            f"{name}: replication={m.replication_factor:.2f} "
+            f"edge_imb={m.edge_imbalance:.2f} vertex_imb={m.vertex_imbalance:.2f} | "
+            f"CC supersteps={stats.supersteps} messages={stats.total_messages} "
+            f"max/mean={stats.max_mean:.3f}"
+        )
+    print("EBG cuts fewer vertices -> fewer messages, same balance. (paper §V)")
+
+
+if __name__ == "__main__":
+    main()

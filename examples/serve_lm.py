@@ -1,0 +1,20 @@
+"""Batched-serving example: prefill + greedy decode on an assigned arch
+(reduced config) — exercises KV caches, GQA decode, the serve_step path.
+
+  PYTHONPATH=src python examples/serve_lm.py --arch qwen3_4b
+"""
+import argparse
+
+from repro.launch import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3_4b")
+    ap.add_argument("--tokens", type=int, default=24)
+    args = ap.parse_args()
+    serve.main(["--arch", args.arch, "--tokens", str(args.tokens), "--batch", "4"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Fault-tolerant checkpointing: sharded msgpack+zstd leaves, atomic
+manifest, latest-step discovery, async save thread.
+
+Layout:  <dir>/step_000123/
+            manifest.json   {step, leaves: [{path, shape, dtype, file}]}
+            L00000.bin.zst  raw little-endian bytes per leaf
+A checkpoint only "exists" once manifest.json is renamed into place, so a
+killed writer never corrupts restart (tests/test_checkpoint.py kills a
+training loop mid-save and restarts bitwise-identically).
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+from pathlib import Path
+
+import jax
+import numpy as np
+import zstandard
+
+_KEY_SEP = "|"
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = _KEY_SEP.join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        out.append((key, leaf))
+    return out, treedef
+
+
+def save(ckpt_dir: str | Path, step: int, tree) -> Path:
+    ckpt_dir = Path(ckpt_dir)
+    final = ckpt_dir / f"step_{step:08d}"
+    tmp = ckpt_dir / f".tmp_step_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    leaves, _ = _flatten_with_paths(tree)
+    cctx = zstandard.ZstdCompressor(level=3)
+    manifest = {"step": step, "leaves": []}
+    for i, (key, leaf) in enumerate(leaves):
+        arr = np.asarray(leaf)
+        fn = f"L{i:05d}.bin.zst"
+        (tmp / fn).write_bytes(cctx.compress(arr.tobytes()))
+        manifest["leaves"].append(
+            dict(path=key, shape=list(arr.shape), dtype=str(arr.dtype), file=fn)
+        )
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)  # atomic publish
+    return final
+
+
+def latest_step(ckpt_dir: str | Path) -> int | None:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = []
+    for p in ckpt_dir.iterdir():
+        if p.name.startswith("step_") and (p / "manifest.json").exists():
+            steps.append(int(p.name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str | Path, step: int, like_tree):
+    """Restore into the structure (and shardings) of `like_tree`."""
+    d = Path(ckpt_dir) / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    dctx = zstandard.ZstdDecompressor()
+    by_path = {m["path"]: m for m in manifest["leaves"]}
+    leaves, treedef = _flatten_with_paths(like_tree)
+    out = []
+    for key, like in leaves:
+        m = by_path[key]
+        raw = dctx.decompress((d / m["file"]).read_bytes())
+        arr = np.frombuffer(raw, dtype=np.dtype(m["dtype"])).reshape(m["shape"])
+        if hasattr(like, "sharding"):
+            arr = jax.device_put(arr.astype(like.dtype), like.sharding)
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, [v for v in out])
+
+
+class AsyncCheckpointer:
+    """Overlaps checkpoint I/O with the next training step."""
+
+    def __init__(self, ckpt_dir: str | Path):
+        self.ckpt_dir = Path(ckpt_dir)
+        self._thread: threading.Thread | None = None
+
+    def save(self, step: int, tree):
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)  # snapshot before async
+        self._thread = threading.Thread(target=save, args=(self.ckpt_dir, step, host_tree))
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

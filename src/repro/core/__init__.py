@@ -1,0 +1,45 @@
+"""repro.core — the paper's contribution: partitioners + metrics."""
+from repro.core.baselines import cvc_partition, dbh_partition, random_hash_partition
+from repro.core.ebg import ebg_partition, ebg_partition_chunked
+from repro.core.ebg_np import ebg_partition_np
+from repro.core.metis_like import metis_like_partition
+from repro.core.metrics import (
+    PartitionMetrics,
+    max_mean_ratio,
+    partition_metrics,
+    theorem1_edge_bound,
+    theorem2_vertex_bound,
+)
+from repro.core.ne import ne_partition
+from repro.core.order import degree_sum_order
+from repro.core.types import Graph, PartitionResult
+
+PARTITIONERS = {
+    "ebg": ebg_partition,
+    "ebg_chunked": ebg_partition_chunked,
+    "dbh": dbh_partition,
+    "cvc": cvc_partition,
+    "ne": ne_partition,
+    "metis": metis_like_partition,
+    "hash": random_hash_partition,
+}
+
+__all__ = [
+    "Graph",
+    "PartitionResult",
+    "PartitionMetrics",
+    "PARTITIONERS",
+    "ebg_partition",
+    "ebg_partition_chunked",
+    "ebg_partition_np",
+    "dbh_partition",
+    "cvc_partition",
+    "ne_partition",
+    "metis_like_partition",
+    "random_hash_partition",
+    "degree_sum_order",
+    "partition_metrics",
+    "max_mean_ratio",
+    "theorem1_edge_bound",
+    "theorem2_vertex_bound",
+]

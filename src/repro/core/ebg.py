@@ -1,0 +1,175 @@
+"""EBG — Efficient and Balanced Greedy edge partitioner (paper Algorithm 1).
+
+Faithful JAX implementation: a `jax.lax.scan` over the degree-sum-sorted
+edge stream. State is the `keep` membership bitset (p × V bool), and the
+running `e_count` / `v_count` per subgraph. Each step evaluates the paper's
+evaluation function
+
+    Score_(u,v)(i) = 1[u∉keep[i]] + 1[v∉keep[i]]
+                   + alpha * e_count[i]/(|E|/p) + beta * v_count[i]/(|V|/p)
+
+over all p subgraphs at once (vectorized over i) and commits the argmin.
+Ties break toward the lowest subgraph index; the paper's Appendix-B example
+breaks its single tie the other way, so tests compare up to a relabeling of
+subgraph ids.
+
+`ebg_partition_chunked` is a BEYOND-PAPER throughput variant: scores for a
+block of B edges are evaluated against the block-start state in one
+vectorized pass (VPU/MXU-friendly), then assignments are committed exactly
+and sequentially *within* the block via a small fori_loop on (p,B)-local
+state. With B=1 it is exactly the faithful algorithm; with larger B the
+membership term inside a block is computed against slightly stale `keep`
+(the balance terms are exact), trading a small replication-factor increase
+for ~B× fewer scan steps. The paper names a distributed/online extension as
+future work — this is our step in that direction.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.order import degree_sum_order
+from repro.core.types import Graph, PartitionResult
+
+
+@functools.partial(jax.jit, static_argnames=("num_parts", "num_vertices"))
+def _ebg_scan(src, dst, *, num_parts: int, num_vertices: int, alpha: float, beta: float):
+    E = src.shape[0]
+    p = num_parts
+    inv_e = p / jnp.float32(E)  # 1/(|E|/p)
+    inv_v = p / jnp.float32(num_vertices)
+
+    keep0 = jnp.zeros((p, num_vertices), dtype=jnp.bool_)
+    e0 = jnp.zeros((p,), dtype=jnp.float32)
+    v0 = jnp.zeros((p,), dtype=jnp.float32)
+
+    def step(state, uv):
+        keep, e_count, v_count = state
+        u, v = uv
+        miss_u = ~keep[:, u]
+        miss_v = ~keep[:, v]
+        score = (
+            miss_u.astype(jnp.float32)
+            + miss_v.astype(jnp.float32)
+            + alpha * e_count * inv_e
+            + beta * v_count * inv_v
+        )
+        i = jnp.argmin(score).astype(jnp.int32)
+        e_count = e_count.at[i].add(1.0)
+        v_count = v_count.at[i].add(miss_u[i].astype(jnp.float32) + miss_v[i].astype(jnp.float32))
+        keep = keep.at[i, u].set(True).at[i, v].set(True)
+        return (keep, e_count, v_count), i
+
+    (keep, e_count, v_count), part = jax.lax.scan(step, (keep0, e0, v0), (src, dst))
+    return part, keep, e_count, v_count
+
+
+def ebg_partition(
+    graph: Graph,
+    num_parts: int,
+    *,
+    alpha: float = 1.0,
+    beta: float = 1.0,
+    order: Optional[np.ndarray] = None,
+    sort_edges: bool = True,
+) -> PartitionResult:
+    """Faithful EBG (Algorithm 1 + §IV-C degree-sum ordering)."""
+    if order is None and sort_edges:
+        order = degree_sum_order(graph)
+    src = jnp.asarray(np.asarray(graph.src), dtype=jnp.int32)
+    dst = jnp.asarray(np.asarray(graph.dst), dtype=jnp.int32)
+    if order is not None:
+        o = jnp.asarray(order)
+        src, dst = src[o], dst[o]
+    part, _, _, _ = _ebg_scan(
+        src,
+        dst,
+        num_parts=num_parts,
+        num_vertices=graph.num_vertices,
+        alpha=float(alpha),
+        beta=float(beta),
+    )
+    return PartitionResult(part=part, num_parts=num_parts, order=None if order is None else np.asarray(order))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_parts", "num_vertices", "block")
+)
+def _ebg_chunked(src, dst, *, num_parts: int, num_vertices: int, alpha: float, beta: float, block: int):
+    E = src.shape[0]
+    p = num_parts
+    assert E % block == 0
+    inv_e = p / jnp.float32(E)
+    inv_v = p / jnp.float32(num_vertices)
+
+    keep0 = jnp.zeros((p, num_vertices), dtype=jnp.bool_)
+    e0 = jnp.zeros((p,), dtype=jnp.float32)
+    v0 = jnp.zeros((p,), dtype=jnp.float32)
+
+    def step(state, uv_block):
+        keep, e_count, v_count = state
+        ub, vb = uv_block  # [B]
+        # Vectorized membership lookups against block-start keep: (p, B).
+        miss_u = ~keep[:, ub]
+        miss_v = ~keep[:, vb]
+        memb = miss_u.astype(jnp.float32) + miss_v.astype(jnp.float32)
+
+        # Sequential exact commit of balance terms within the block.
+        def body(j, carry):
+            e_c, v_c, parts = carry
+            score = memb[:, j] + alpha * e_c * inv_e + beta * v_c * inv_v
+            i = jnp.argmin(score).astype(jnp.int32)
+            e_c = e_c.at[i].add(1.0)
+            v_c = v_c.at[i].add(miss_u[i, j].astype(jnp.float32) + miss_v[i, j].astype(jnp.float32))
+            return e_c, v_c, parts.at[j].set(i)
+
+        e_count, v_count, parts = jax.lax.fori_loop(
+            0, ub.shape[0], body, (e_count, v_count, jnp.zeros((ub.shape[0],), jnp.int32))
+        )
+        # Batched keep update after the block commits.
+        keep = keep.at[parts, ub].set(True)
+        keep = keep.at[parts, vb].set(True)
+        return (keep, e_count, v_count), parts
+
+    (keep, e_count, v_count), part = jax.lax.scan(
+        step, (keep0, e0, v0), (src.reshape(-1, block), dst.reshape(-1, block))
+    )
+    return part.reshape(-1), keep, e_count, v_count
+
+
+def ebg_partition_chunked(
+    graph: Graph,
+    num_parts: int,
+    *,
+    alpha: float = 1.0,
+    beta: float = 1.0,
+    block: int = 256,
+    sort_edges: bool = True,
+) -> PartitionResult:
+    """Blocked EBG (beyond-paper throughput variant; block=1 ≡ faithful)."""
+    order = degree_sum_order(graph) if sort_edges else None
+    src = np.asarray(graph.src, dtype=np.int32)
+    dst = np.asarray(graph.dst, dtype=np.int32)
+    if order is not None:
+        src, dst = src[order], dst[order]
+    E = src.shape[0]
+    pad = (-E) % block
+    if pad:
+        # Pad with a self-loop on vertex 0; dropped from the result.
+        src = np.concatenate([src, np.zeros((pad,), np.int32)])
+        dst = np.concatenate([dst, np.zeros((pad,), np.int32)])
+    part, _, _, _ = _ebg_chunked(
+        jnp.asarray(src),
+        jnp.asarray(dst),
+        num_parts=num_parts,
+        num_vertices=graph.num_vertices,
+        alpha=float(alpha),
+        beta=float(beta),
+        block=block,
+    )
+    part = part[:E]
+    return PartitionResult(part=part, num_parts=num_parts, order=order)

@@ -1,0 +1,91 @@
+"""Neighbor Expansion (NE) edge partitioner [Zhang et al., KDD'17].
+
+Search-based: each partition grows from a seed vertex by repeatedly
+expanding the boundary vertex with the fewest unassigned incident edges,
+claiming those edges, until the partition reaches its edge capacity
+|E|/p. Produces near-perfect EDGE balance but (on power-law graphs) poor
+VERTEX balance — exactly the pathology Table III of the paper reports
+(NE vertex imbalance 2.1–3.6 on power-law graphs).
+
+This is a host-side (numpy + heap) reference implementation: the paper
+treats NE as an offline sequential baseline and so do we.
+"""
+from __future__ import annotations
+
+import heapq
+
+import numpy as np
+
+from repro.core.types import Graph, PartitionResult
+
+
+def ne_partition(graph: Graph, num_parts: int, *, seed: int = 0) -> PartitionResult:
+    src = np.asarray(graph.src, dtype=np.int64)
+    dst = np.asarray(graph.dst, dtype=np.int64)
+    E, V, p = src.shape[0], graph.num_vertices, num_parts
+
+    # CSR over the undirected view (each directed edge indexed once; a
+    # vertex's incident list contains edge ids where it is src or dst).
+    ends = np.concatenate([src, dst])
+    eids = np.concatenate([np.arange(E), np.arange(E)])
+    order = np.argsort(ends, kind="stable")
+    ends_s, eids_s = ends[order], eids[order]
+    indptr = np.zeros(V + 1, dtype=np.int64)
+    np.add.at(indptr, ends + 1, 0)  # no-op, keep shape clear
+    counts = np.bincount(ends, minlength=V)
+    indptr[1:] = np.cumsum(counts)
+    incident = eids_s  # incident[indptr[v]:indptr[v+1]] = edge ids at v
+
+    part = np.full(E, -1, dtype=np.int32)
+    unassigned_deg = counts.astype(np.int64).copy()
+    rng = np.random.default_rng(seed)
+    capacity = int(np.ceil(E / p))
+
+    assigned_total = 0
+    for k in range(p):
+        remaining_parts = p - k
+        target = min(capacity, int(np.ceil((E - assigned_total) / remaining_parts)))
+        size = 0
+        heap: list[tuple[int, int]] = []  # (unassigned_deg, vertex)
+        in_boundary = np.zeros(V, dtype=bool)
+
+        def push(v: int) -> None:
+            if not in_boundary[v] and unassigned_deg[v] > 0:
+                in_boundary[v] = True
+                heapq.heappush(heap, (int(unassigned_deg[v]), int(v)))
+
+        while size < target and assigned_total < E:
+            # Pick expansion vertex: min unassigned degree in boundary.
+            x = -1
+            while heap:
+                d, v = heapq.heappop(heap)
+                in_boundary[v] = False
+                if unassigned_deg[v] > 0:
+                    if d != unassigned_deg[v]:
+                        push(v)  # stale entry, reinsert with fresh key
+                        continue
+                    x = v
+                    break
+            if x < 0:
+                # Fresh random seed vertex with unassigned edges.
+                cand = rng.integers(0, V)
+                scan = np.flatnonzero(unassigned_deg > 0)
+                if scan.size == 0:
+                    break
+                x = int(scan[rng.integers(0, scan.size)])
+            # Claim all unassigned edges incident to x.
+            for e in incident[indptr[x] : indptr[x + 1]]:
+                if part[e] >= 0 or size >= target:
+                    continue
+                part[e] = k
+                size += 1
+                assigned_total += 1
+                for v in (src[e], dst[e]):
+                    unassigned_deg[v] -= 1
+                    if v != x:
+                        push(int(v))
+            unassigned_deg[x] = max(0, int(unassigned_deg[x]))
+
+    # Any leftovers (capacity rounding) go to the last partition.
+    part[part < 0] = p - 1
+    return PartitionResult(part=part, num_parts=p)

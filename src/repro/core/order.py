@@ -1,0 +1,21 @@
+"""Edge processing order for EBG (paper §IV-C).
+
+Edges are sorted ascending by the sum of their end-vertices' total degrees,
+so low-degree edges seed the subgraphs and high-degree hubs are cut late.
+Ties are broken by original edge index (stable sort) to match the paper's
+worked example (Appendix B) deterministically.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.types import Graph
+
+
+def degree_sum_order(graph: Graph) -> np.ndarray:
+    """Return a permutation of edge indices, ascending by degree-sum."""
+    deg = graph.degrees()
+    src = np.asarray(graph.src)
+    dst = np.asarray(graph.dst)
+    key = deg[src] + deg[dst]
+    return np.argsort(key, kind="stable").astype(np.int64)

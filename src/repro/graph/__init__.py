@@ -1,0 +1,3 @@
+"""repro.graph — subgraph-centric BSP substrate."""
+from repro.graph.build import SubgraphSet, build_subgraphs
+from repro.graph.engine import BSPStats, CC, SSSP, run_min_bsp, run_pagerank

@@ -1,0 +1,104 @@
+"""The paper's three benchmark algorithms on the BSP engine + host oracles."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.types import Graph, PartitionResult
+from repro.graph.build import SubgraphSet, build_subgraphs
+from repro.graph.engine import (
+    CC,
+    SSSP,
+    BSPStats,
+    init_cc,
+    init_sssp,
+    run_min_bsp,
+    run_pagerank,
+)
+
+
+def connected_components(
+    sub: SubgraphSet, **kw
+) -> tuple[np.ndarray, BSPStats]:
+    """Min-label propagation CC. Returns labels indexed by (part, local)."""
+    val, stats = run_min_bsp(sub, CC, init_cc(sub), **kw)
+    return np.asarray(val[:, :-1]), stats
+
+
+def sssp(sub: SubgraphSet, source: int, **kw) -> tuple[np.ndarray, BSPStats]:
+    val, stats = run_min_bsp(sub, SSSP, init_sssp(sub, source), **kw)
+    return np.asarray(val[:, :-1]), stats
+
+
+def pagerank(sub: SubgraphSet, num_vertices: int, **kw) -> tuple[np.ndarray, BSPStats]:
+    val, stats = run_pagerank(sub, num_vertices, **kw)
+    return np.asarray(val[:, :-1]), stats
+
+
+# ------------------------------------------------------------ host oracles
+
+
+def cc_reference(graph: Graph) -> np.ndarray:
+    """Min-label CC on the undirected view (numpy label propagation)."""
+    src = np.asarray(graph.src, np.int64)
+    dst = np.asarray(graph.dst, np.int64)
+    labels = np.arange(graph.num_vertices, dtype=np.int64)
+    while True:
+        a = np.minimum.reduce([labels[src], labels[dst]])
+        new = labels.copy()
+        np.minimum.at(new, src, a)
+        np.minimum.at(new, dst, a)
+        if np.array_equal(new, labels):
+            return labels
+        labels = new
+
+
+def sssp_reference(graph: Graph, source: int, weights: np.ndarray | None = None) -> np.ndarray:
+    """Bellman-Ford (numpy, directed)."""
+    src = np.asarray(graph.src, np.int64)
+    dst = np.asarray(graph.dst, np.int64)
+    w = np.ones(src.shape[0], np.float64) if weights is None else weights.astype(np.float64)
+    dist = np.full(graph.num_vertices, np.inf)
+    dist[source] = 0.0
+    while True:
+        cand = dist[src] + w
+        new = dist.copy()
+        np.minimum.at(new, dst, cand)
+        if np.array_equal(new, dist, equal_nan=True) or np.allclose(new, dist, equal_nan=True):
+            return dist
+        dist = new
+
+
+def pagerank_reference(graph: Graph, *, damping: float = 0.85, num_iters: int = 20) -> np.ndarray:
+    src = np.asarray(graph.src, np.int64)
+    dst = np.asarray(graph.dst, np.int64)
+    N = graph.num_vertices
+    outdeg = np.bincount(src, minlength=N).astype(np.float64)
+    rank = np.full(N, 1.0 / N)
+    for _ in range(num_iters):
+        share = np.where(outdeg > 0, rank / np.maximum(outdeg, 1), 0.0)
+        agg = np.zeros(N)
+        np.add.at(agg, dst, share[src])
+        rank = (1 - damping) / N + damping * agg
+    return rank
+
+
+def scatter_to_global(sub: SubgraphSet, local_vals: np.ndarray, num_vertices: int, reduce: str = "min") -> np.ndarray:
+    """Collect per-(part, local) values into a global array via masters."""
+    gid = np.asarray(sub.gid)
+    is_m = np.asarray(sub.is_master)
+    out = np.full(num_vertices, np.inf if reduce == "min" else 0.0)
+    sel = is_m & (gid >= 0)
+    out[gid[sel]] = local_vals[sel]
+    return out
+
+
+def partition_and_build(
+    graph: Graph,
+    partitioner,
+    num_parts: int,
+    *,
+    symmetrize: bool = False,
+    **kw,
+) -> tuple[PartitionResult, SubgraphSet]:
+    result = partitioner(graph, num_parts, **kw)
+    return result, build_subgraphs(graph, result, symmetrize=symmetrize)

@@ -1,0 +1,406 @@
+"""Subgraph-centric bulk-synchronous-parallel engine (paper §IV-B).
+
+One subgraph == one worker == one mesh device. A superstep is
+  1. compute:   local fixpoint over the subgraph's own edges ("think like a
+                graph" — iterate to convergence inside the subgraph),
+  2. exchange:  mirror→master reduction then master→mirror broadcast over
+                fixed padded buffers (dense all_to_all; the TPU-native
+                替代 of MPI point-to-point sends),
+  3. barrier:   implicit in SPMD — the collective is the synchronization.
+
+Two execution modes sharing the same superstep body:
+  - simulation:   all p workers live on one device as a leading batch axis;
+                  exchange is a transpose. Used by tests/benchmarks.
+  - distributed:  shard_map over a mesh axis; exchange is lax.all_to_all.
+                  Used by the multi-pod dry-run and real clusters.
+
+Messages are counted with delta semantics (a mirror/master "sends" only if
+its value changed this superstep) — the paper's platform-independent
+communication metric (Tables IV/V). `exchange_period > 1` enables bounded
+staleness (straggler mitigation): workers run k local supersteps between
+global exchanges; monotone (min-semiring) programs converge to the same
+fixpoint.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.graph.build import SubgraphSet
+
+INF_F32 = jnp.float32(3.0e38)
+INF_I32 = jnp.int32(2**31 - 1)
+
+
+@dataclasses.dataclass
+class BSPStats:
+    supersteps: int
+    messages_per_worker: np.ndarray  # [p] total messages sent by each worker
+    messages_per_step: np.ndarray  # [steps]
+    comp_work_per_worker: np.ndarray  # [p] edge-relaxation work proxy
+    inner_iters_per_step: np.ndarray  # [steps, p]
+
+    @property
+    def total_messages(self) -> int:
+        return int(self.messages_per_worker.sum())
+
+    @property
+    def max_mean(self) -> float:
+        m = self.messages_per_worker.astype(np.float64)
+        return float(m.max() / m.mean()) if m.mean() > 0 else 1.0
+
+
+# ---------------------------------------------------------------- helpers
+
+
+def _gather_rows(val: jax.Array, idx: jax.Array) -> jax.Array:
+    """val: [p, max_v+1]; idx: [p, p, m] → out[i, j, m] = val[i, idx[i,j,m]]."""
+    p = val.shape[0]
+    return jnp.take_along_axis(val, idx.reshape(p, -1), axis=1).reshape(idx.shape)
+
+
+def _scatter_min(val: jax.Array, idx: jax.Array, upd: jax.Array) -> jax.Array:
+    p = val.shape[0]
+    rows = jnp.arange(p)[:, None]
+    return val.at[rows, idx.reshape(p, -1)].min(upd.reshape(p, -1))
+
+
+def _scatter_add(val: jax.Array, idx: jax.Array, upd: jax.Array) -> jax.Array:
+    p = val.shape[0]
+    rows = jnp.arange(p)[:, None]
+    return val.at[rows, idx.reshape(p, -1)].add(upd.reshape(p, -1))
+
+
+def _scatter_set(val: jax.Array, idx: jax.Array, upd: jax.Array) -> jax.Array:
+    p = val.shape[0]
+    rows = jnp.arange(p)[:, None]
+    return val.at[rows, idx.reshape(p, -1)].set(upd.reshape(p, -1))
+
+
+def _segment_min(data, seg, num_segments, inf):
+    return jax.ops.segment_min(data, seg, num_segments=num_segments, indices_are_sorted=True)
+
+
+# ------------------------------------------------------- min-semiring BSP
+
+
+@dataclasses.dataclass(frozen=True)
+class MinProgram:
+    """CC / SSSP family: propagate min(val[src] (+ w)) along edges."""
+
+    name: str
+    use_weight: bool  # SSSP adds edge weight; CC doesn't
+    bidirectional: bool  # CC treats edges as undirected
+    dtype: str  # "int32" | "float32"
+
+    @property
+    def inf(self):
+        return INF_I32 if self.dtype == "int32" else INF_F32
+
+
+CC = MinProgram("cc", use_weight=False, bidirectional=True, dtype="int32")
+SSSP = MinProgram("sssp", use_weight=True, bidirectional=False, dtype="float32")
+
+
+def _local_min_fixpoint(prog: MinProgram, sub: SubgraphSet, val: jax.Array, inner_cap: int):
+    """Batched local fixpoint. val: [p, max_v+1] (last slot = dump)."""
+    nseg = sub.max_v + 1
+    inf = prog.inf
+
+    def relax(v):
+        data = jnp.take_along_axis(v, sub.lsrc, axis=1)
+        if prog.use_weight:
+            data = data + sub.weight.astype(v.dtype)
+        data = jnp.where(sub.edge_mask, data, inf)
+        cand = jax.vmap(lambda d, s: _segment_min(d, s, nseg, inf))(data, sub.ldst)
+        new = jnp.minimum(v, cand)
+        if prog.bidirectional:
+            data2 = jnp.take_along_axis(v, sub.ldst_s, axis=1)
+            if prog.use_weight:
+                data2 = data2 + sub.weight_s.astype(v.dtype)
+            data2 = jnp.where(sub.edge_mask_s, data2, inf)
+            cand2 = jax.vmap(lambda d, s: _segment_min(d, s, nseg, inf))(data2, sub.lsrc_s)
+            new = jnp.minimum(new, cand2)
+        return new
+
+    def cond(carry):
+        _, changed, it = carry
+        return jnp.any(changed) & (it < inner_cap)
+
+    def body(carry):
+        v, _, it = carry
+        new = relax(v)
+        ch = jnp.any(new != v, axis=1)  # per worker
+        return new, ch, it + 1
+
+    def body_count(carry):
+        v, ch, it, iters = carry
+        new = relax(v)
+        ch = jnp.any(new != v, axis=1)
+        return new, ch, it + 1, iters + ch.astype(jnp.int32)
+
+    p = val.shape[0]
+    carry = (val, jnp.ones((p,), bool), jnp.int32(0), jnp.zeros((p,), jnp.int32))
+    carry = jax.lax.while_loop(lambda c: jnp.any(c[1]) & (c[2] < inner_cap), body_count, carry)
+    new_val, _, _, iters = carry
+    return new_val, iters
+
+
+def _min_superstep(
+    prog: MinProgram,
+    sub: SubgraphSet,
+    val,
+    exchange,
+    inner_cap: int,
+    do_exchange: bool = True,
+    count_ref=None,
+):
+    """One BSP superstep. Returns (new_val, per-worker msg count, iters).
+
+    `count_ref` is the value snapshot of the LAST exchange — delta messages
+    are counted against it (matters under bounded staleness).
+    """
+    start = val if count_ref is None else count_ref
+    val2, iters = _local_min_fixpoint(prog, sub, val, inner_cap)
+    if not do_exchange:  # bounded-staleness local step (straggler mitigation)
+        return val2, jnp.zeros((val.shape[0],), jnp.int32), iters
+
+    # mirror → master (forward): send current values of mirror slots.
+    S = _gather_rows(val2, sub.send_idx)  # [i, j, m]
+    changed = val2 != start
+    ch_send = jnp.take_along_axis(changed, sub.send_idx.reshape(val.shape[0], -1), axis=1).reshape(
+        sub.send_idx.shape
+    )
+    msgs_fwd = jnp.sum(ch_send & sub.msg_mask, axis=(1, 2))
+    R = exchange(S)  # receiver-rowed [j, i, m]
+    val3 = _scatter_min(val2, sub.recv_idx, jnp.where(sub.recv_mask, R, prog.inf))
+
+    # master → mirror (broadcast): masters push combined value back.
+    B = _gather_rows(val3, sub.recv_idx)  # [j, i, m] master values
+    ch_master = val3 != start
+    ch_b = jnp.take_along_axis(
+        ch_master, sub.recv_idx.reshape(val.shape[0], -1), axis=1
+    ).reshape(sub.recv_idx.shape)
+    msgs_bwd = jnp.sum(ch_b & sub.recv_mask, axis=(1, 2))
+    Rb = exchange(B)  # sender-rowed view at mirrors: [i, j, m]
+    idx_masked = jnp.where(sub.msg_mask, sub.send_idx, sub.max_v)
+    val4 = _scatter_set(val3, idx_masked, Rb)
+
+    return val4, msgs_fwd + msgs_bwd, iters
+
+
+# --------------------------------------------------------------- PageRank
+
+
+def _pr_superstep(sub: SubgraphSet, rank, exchange, damping: float, num_vertices: int):
+    """One PageRank (power-iteration) superstep."""
+    p = rank.shape[0]
+    nseg = sub.max_v + 1
+    outdeg = jnp.concatenate([sub.out_degree, jnp.ones((p, 1), jnp.float32)], axis=1)
+    share = jnp.where(outdeg > 0, rank / outdeg, 0.0)
+    data = jnp.take_along_axis(share, sub.lsrc, axis=1)
+    data = jnp.where(sub.edge_mask, data, 0.0)
+    partial = jax.vmap(
+        lambda d, s: jax.ops.segment_sum(d, s, num_segments=nseg, indices_are_sorted=True)
+    )(data, sub.ldst)
+
+    # mirror partials → master (sum), then master computes the new rank.
+    S = _gather_rows(partial, sub.send_idx)
+    msgs_fwd = jnp.sum(sub.msg_mask, axis=(1, 2))  # PR sends every superstep
+    R = exchange(S)
+    total = _scatter_add(partial, sub.recv_idx, jnp.where(sub.recv_mask, R, 0.0))
+    base = (1.0 - damping) / num_vertices
+    new_rank = jnp.where(sub.is_master, base + damping * total[:, : sub.max_v], 0.0)
+    new_rank = jnp.concatenate([new_rank, jnp.zeros((p, 1), jnp.float32)], axis=1)
+
+    # broadcast master rank → mirrors.
+    B = _gather_rows(new_rank, sub.recv_idx)
+    msgs_bwd = jnp.sum(sub.recv_mask, axis=(1, 2))
+    Rb = exchange(B)
+    idx_masked = jnp.where(sub.msg_mask, sub.send_idx, sub.max_v)
+    new_rank = _scatter_set(new_rank, idx_masked, Rb)
+    delta = jnp.abs(new_rank[:, : sub.max_v] - rank[:, : sub.max_v]).sum()
+    return new_rank, msgs_fwd + msgs_bwd, delta
+
+
+# ------------------------------------------------------------ entry points
+
+
+def _sim_exchange(S: jax.Array) -> jax.Array:
+    return jnp.swapaxes(S, 0, 1)
+
+
+def init_cc(sub: SubgraphSet) -> jax.Array:
+    p = sub.gid.shape[0]
+    val = jnp.where(sub.vmask, sub.gid, INF_I32)
+    return jnp.concatenate([val, jnp.full((p, 1), INF_I32, jnp.int32)], axis=1)
+
+
+def init_sssp(sub: SubgraphSet, source: int) -> jax.Array:
+    p = sub.gid.shape[0]
+    val = jnp.where(sub.gid == source, 0.0, INF_F32).astype(jnp.float32)
+    return jnp.concatenate([val, jnp.full((p, 1), INF_F32, jnp.float32)], axis=1)
+
+
+def init_pr(sub: SubgraphSet, num_vertices: int) -> jax.Array:
+    p = sub.gid.shape[0]
+    val = jnp.where(sub.is_master, 1.0 / num_vertices, 0.0).astype(jnp.float32)
+    # mirrors start with the same global value (broadcast of init).
+    val = jnp.where(sub.vmask, 1.0 / num_vertices, 0.0).astype(jnp.float32)
+    return jnp.concatenate([val, jnp.zeros((p, 1), jnp.float32)], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("prog", "inner_cap", "do_exchange"))
+def _jit_min_superstep_sim(prog, sub, val, inner_cap, do_exchange, count_ref):
+    return _min_superstep(prog, sub, val, _sim_exchange, inner_cap, do_exchange, count_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("damping", "num_vertices"))
+def _jit_pr_superstep_sim(sub, rank, damping, num_vertices):
+    return _pr_superstep(sub, rank, _sim_exchange, damping, num_vertices)
+
+
+def run_min_bsp(
+    sub: SubgraphSet,
+    prog: MinProgram,
+    init_val: jax.Array,
+    *,
+    max_supersteps: int = 200,
+    inner_cap: int = 10_000,
+    exchange_period: int = 1,
+) -> tuple[jax.Array, BSPStats]:
+    """Simulation-mode driver for CC/SSSP. exchange_period>1 = bounded staleness."""
+    val = init_val
+    msg_steps = []
+    iters_steps = []
+    p = val.shape[0]
+    msgs_total = np.zeros((p,), np.int64)
+    work = np.zeros((p,), np.int64)
+    edges = np.asarray(sub.edge_mask.sum(axis=1))
+    steps = 0
+    last_exchanged = val
+    for k in range(max_supersteps):
+        do_exchange = (k % exchange_period) == exchange_period - 1
+        before = val
+        val, msgs, iters = _jit_min_superstep_sim(
+            prog, sub, val, inner_cap, do_exchange, last_exchanged
+        )
+        if do_exchange:
+            last_exchanged = val
+        steps += 1
+        m = np.asarray(msgs, np.int64)
+        it = np.asarray(iters, np.int64)
+        msg_steps.append(m.sum())
+        iters_steps.append(it)
+        msgs_total += m
+        work += it * edges
+        # Converged only when an exchange round produced no change anywhere.
+        if do_exchange and not bool(jnp.any(val != before)):
+            break
+    return val, BSPStats(
+        supersteps=steps,
+        messages_per_worker=msgs_total,
+        messages_per_step=np.asarray(msg_steps),
+        comp_work_per_worker=work,
+        inner_iters_per_step=np.asarray(iters_steps),
+    )
+
+
+def run_pagerank(
+    sub: SubgraphSet,
+    num_vertices: int,
+    *,
+    damping: float = 0.85,
+    num_iters: int = 20,
+    tol: float = 0.0,
+) -> tuple[jax.Array, BSPStats]:
+    rank = init_pr(sub, num_vertices)
+    p = rank.shape[0]
+    msgs_total = np.zeros((p,), np.int64)
+    msg_steps = []
+    edges = np.asarray(sub.edge_mask.sum(axis=1))
+    steps = 0
+    for _ in range(num_iters):
+        rank, msgs, delta = _jit_pr_superstep_sim(sub, rank, damping, num_vertices)
+        steps += 1
+        m = np.asarray(msgs, np.int64)
+        msgs_total += m
+        msg_steps.append(m.sum())
+        if tol and float(delta) < tol:
+            break
+    return rank, BSPStats(
+        supersteps=steps,
+        messages_per_worker=msgs_total,
+        messages_per_step=np.asarray(msg_steps),
+        comp_work_per_worker=edges * steps,
+        inner_iters_per_step=np.ones((steps, p), np.int64),
+    )
+
+
+# ------------------------------------------------- distributed (shard_map)
+
+
+_ARRAY_FIELDS = [
+    "lsrc", "ldst", "weight", "edge_mask",
+    "lsrc_s", "ldst_s", "weight_s", "edge_mask_s",
+    "gid", "vmask", "is_master", "out_degree",
+    "send_idx", "recv_idx", "msg_mask", "recv_mask",
+]
+_STATIC_FIELDS = ["num_parts", "max_v", "max_e", "max_msg"]
+
+
+def subgraphs_to_arrays(sub: SubgraphSet) -> tuple[dict, dict]:
+    arrays = {k: getattr(sub, k) for k in _ARRAY_FIELDS}
+    statics = {k: getattr(sub, k) for k in _STATIC_FIELDS}
+    return arrays, statics
+
+
+def make_distributed_stepper(
+    mesh,
+    axes,
+    prog: MinProgram,
+    statics: dict,
+    *,
+    num_supersteps: int,
+    inner_cap: int,
+):
+    """Builds a shard_map'd BSP runner: subgraphs sharded 1:1 over `axes`.
+
+    `axes` may be a single mesh axis name or a tuple (e.g. ("pod","data",
+    "model")) whose sizes multiply to the number of subgraphs — this is what
+    the multi-pod dry-run lowers: p=512 subgraphs over (pod, data, model).
+    Takes the subgraph tensors as a dict (see `subgraphs_to_arrays`) so the
+    sharding specs form a clean pytree.
+    """
+    shard_map = jax.shard_map
+
+    axis_tuple = axes if isinstance(axes, tuple) else (axes,)
+    spec3 = P(axis_tuple, None, None)
+    spec2 = P(axis_tuple, None)
+    in_specs = ({k: (spec3 if k in ("send_idx", "recv_idx", "msg_mask", "recv_mask") else spec2) for k in _ARRAY_FIELDS}, spec2)
+
+    def a2a_exchange(S):  # S: [1, p, m] per device
+        out = jax.lax.all_to_all(S, axis_tuple, split_axis=1, concat_axis=0, tiled=False)
+        # out: [p, 1, m] → receiver-rowed [1, p, m]
+        return jnp.swapaxes(out, 0, 1)
+
+    def stepper(arrays: dict, val: jax.Array):
+        sub = SubgraphSet(**arrays, **statics)
+
+        def body(carry, _):
+            v, msgs = carry
+            v, m, _ = _min_superstep(prog, sub, v, a2a_exchange, inner_cap)
+            return (v, msgs + m), None
+
+        (val_out, msgs), _ = jax.lax.scan(
+            body, (val, jnp.zeros((val.shape[0],), jnp.int32)), None, length=num_supersteps
+        )
+        return val_out, msgs
+
+    return shard_map(stepper, mesh=mesh, in_specs=in_specs, out_specs=(spec2, P(axis_tuple)), check_vma=False)

@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: flash-decode GQA attention (one query token).
+
+Serving hot spot for the decode_32k / long_500k shapes: a single new token
+attends over a long KV cache. Online-softmax over KV blocks streamed
+HBM→VMEM; per-(batch, kv-head) accumulators live in VMEM scratch. The
+query-group dim G (= Hq/Hkv) and head dim D form the VPU/MXU tile; the KV
+sequence is the sequential grid dimension.
+
+Layout: q [B, Hkv, G, D]; k, v [B, S, Hkv, D]. fp32 accumulation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -3.0e38  # plain float (kernel-capture-safe)
+
+
+def _decode_attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *, softcap: float, scale: float):
+    s_step = pl.program_id(2)
+    n_s = pl.num_programs(2)
+
+    @pl.when(s_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # [G, D]
+    k = k_ref[0, :, 0].astype(jnp.float32)  # [Sb, D]
+    v = v_ref[0, :, 0].astype(jnp.float32)  # [Sb, D]
+
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # [G, Sb]
+    if softcap:
+        scores = softcap * jnp.tanh(scores / softcap)
+
+    m_prev = m_ref[...]  # [G, 1]
+    m_new = jnp.maximum(m_prev, scores.max(axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new)  # [G, Sb]
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(s_step == n_s - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "softcap", "interpret"))
+def decode_attention_pallas(
+    q: jax.Array,  # [B, Hq, D]
+    k: jax.Array,  # [B, S, Hkv, D]
+    v: jax.Array,  # [B, S, Hkv, D]
+    *,
+    block_s: int = 512,
+    softcap: float = 0.0,
+    interpret: bool = True,
+):
+    B, Hq, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    assert S % block_s == 0
+    qg = q.reshape(B, Hkv, G, D)
+    grid = (B, Hkv, S // block_s)
+    out = pl.pallas_call(
+        functools.partial(
+            _decode_attn_kernel, softcap=float(softcap), scale=1.0 / float(D) ** 0.5
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_s, 1, D), lambda b, h, s: (b, s, h, 0)),
+            pl.BlockSpec((1, block_s, 1, D), lambda b, h, s: (b, s, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),  # acc
+            pltpu.VMEM((G, 1), jnp.float32),  # running max
+            pltpu.VMEM((G, 1), jnp.float32),  # running denom
+        ],
+        interpret=interpret,
+    )(qg, k, v)
+    return out.reshape(B, Hq, D)

@@ -1,0 +1,77 @@
+"""Public jit'd wrappers for the Pallas kernels with CPU-oracle dispatch.
+
+On the CPU container the kernels run under interpret=True only in the test
+sweeps (slow but exact); production entry points default to the pure-jnp
+oracle on CPU and the Pallas path on TPU. Callers can force either with
+`impl=`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attn import decode_attention_pallas
+from repro.kernels.ebg_score import ebg_membership_pallas
+from repro.kernels.segment_reduce import segment_reduce_pallas
+
+
+def _default_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def segment_min_plus(lsrc, ldst, weight, val, *, num_out: int, impl: str | None = None, block_e: int = 512):
+    """out[d] = min(val[d], min_{e: dst=d} val[src_e] + w_e); dst-sorted edges.
+
+    Padded edges must carry weight=INF (min identity).
+    """
+    impl = impl or _default_impl()
+    if impl == "ref":
+        mask = weight < ref.INF
+        return ref.segment_min_plus_ref(lsrc, ldst, weight, mask, val, num_out)
+    interpret = jax.default_backend() != "tpu"
+    return segment_reduce_pallas(
+        lsrc, ldst, weight, val, num_out=num_out, block_e=block_e, op="min", interpret=interpret
+    )
+
+
+def segment_sum_scaled(lsrc, ldst, scale, val, *, num_out: int, impl: str | None = None, block_e: int = 512):
+    """out[d] = sum_{e: dst=d} val[src_e] * scale_e; padded edges scale=0."""
+    impl = impl or _default_impl()
+    if impl == "ref":
+        mask = scale != 0.0
+        return ref.segment_sum_ref(lsrc, ldst, scale, mask, val, num_out)
+    interpret = jax.default_backend() != "tpu"
+    return segment_reduce_pallas(
+        lsrc, ldst, scale, val, num_out=num_out, block_e=block_e, op="sum", interpret=interpret
+    )
+
+
+def ebg_membership(keep_bits, u, v, *, impl: str | None = None, block_e: int = 512):
+    """memb[i,b] = #endpoints of edge b absent from keep[i] (packed bitset)."""
+    impl = impl or _default_impl()
+    if impl == "ref":
+        return ref.ebg_membership_ref(keep_bits, u, v)
+    interpret = jax.default_backend() != "tpu"
+    return ebg_membership_pallas(keep_bits, u, v, block_e=block_e, interpret=interpret)
+
+
+def decode_attention(q, k, v, *, softcap: float = 0.0, impl: str | None = None, block_s: int = 512):
+    """Single-token GQA decode attention over a KV cache."""
+    impl = impl or _default_impl()
+    if impl == "ref":
+        return ref.decode_attention_ref(q, k, v, softcap=softcap)
+    interpret = jax.default_backend() != "tpu"
+    return decode_attention_pallas(q, k, v, softcap=softcap, block_s=block_s, interpret=interpret)
+
+
+def pack_keep_bits(keep_bool: jax.Array) -> jax.Array:
+    """[p, V] bool -> [p, ceil(V/32)] uint32 packed bitset."""
+    p, V = keep_bool.shape
+    pad = (-V) % 32
+    kb = jnp.pad(keep_bool, ((0, 0), (0, pad)))
+    words = kb.reshape(p, -1, 32).astype(jnp.uint32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(words << shifts[None, None, :], axis=-1, dtype=jnp.uint32)

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INF = jnp.float32(3.0e38)
+
+
+def segment_min_plus_ref(lsrc, ldst, weight, mask, val, num_out):
+    """out[d] = min(val[d], min over edges e with ldst[e]==d of val[lsrc[e]] + w[e]).
+
+    Edges are destination-sorted; padded edges have mask False.
+    """
+    data = val[lsrc] + weight
+    data = jnp.where(mask, data, INF)
+    cand = jax.ops.segment_min(data, ldst, num_segments=num_out, indices_are_sorted=True)
+    cand = jnp.minimum(cand, val[:num_out])
+    return cand
+
+
+def segment_sum_ref(lsrc, ldst, contrib_scale, mask, val, num_out):
+    """out[d] = sum over edges e with ldst[e]==d of val[lsrc[e]] * scale[e]."""
+    data = val[lsrc] * contrib_scale
+    data = jnp.where(mask, data, 0.0)
+    return jax.ops.segment_sum(data, ldst, num_segments=num_out, indices_are_sorted=True)
+
+
+def ebg_membership_ref(keep_bits, u, v):
+    """memb[i, b] = 1[u_b not in keep[i]] + 1[v_b not in keep[i]].
+
+    keep_bits: [p, Vw] uint32 packed bitset (bit k of word w = vertex w*32+k).
+    """
+
+    def miss(ids):  # [B] -> [p, B]
+        word = keep_bits[:, ids >> 5]
+        bit = (word >> (ids & 31).astype(jnp.uint32)) & 1
+        return (1 - bit).astype(jnp.float32)
+
+    return miss(u) + miss(v)
+
+
+def decode_attention_ref(q, k, v, *, softcap: float = 0.0):
+    """Single-token GQA decode attention.
+
+    q: [B, Hq, D]; k, v: [B, S, Hkv, D]; Hq % Hkv == 0.
+    Returns [B, Hq, D]. fp32 accumulation.
+    """
+    B, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qf, kf) / jnp.sqrt(D).astype(jnp.float32)
+    if softcap:
+        scores = softcap * jnp.tanh(scores / softcap)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", w, vf)
+    return out.reshape(B, Hq, D).astype(q.dtype)

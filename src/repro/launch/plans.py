@@ -1,0 +1,48 @@
+"""Named optimization plans for §Perf hillclimbing.
+
+A plan transforms (cfg, overrides) before lowering — the mechanism the
+hypothesis→change→measure loop uses. `baseline` is the paper-faithful
+untouched configuration; EXPERIMENTS.md §Perf logs every iteration.
+
+overrides keys consumed by launch/dryrun.py:
+  sp:             mesh axis for sequence-parallel activations ("model")
+  compress_grads: "bf16" gradient all-reduce compression
+  vocab_parallel: one-hot vocab-parallel loss (kills the logits all-gather)
+  serve_repl:     replicate weights over the DP axes for decode (kills the
+                  per-step FSDP all-gathers; weights easily fit when serving)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+
+def apply_plan(cfg: ModelConfig, arch: str, shape: str, plan: str):
+    """Returns (cfg, overrides) for a named plan."""
+    overrides: dict = {}
+    if plan == "baseline":
+        return cfg, overrides
+
+    parts = plan.split("+")
+    for p in parts:
+        if p == "vp":  # vocab-parallel loss
+            overrides["vocab_parallel"] = True
+        elif p == "sp":  # sequence-parallel activations over the model axis
+            overrides["sp"] = "model"
+        elif p == "bf16g":  # gradient compression
+            overrides["compress_grads"] = "bf16"
+        elif p == "cap1":  # MoE: capacity 1.0 — less dispatch padding
+            assert cfg.moe is not None
+            cfg = dataclasses.replace(
+                cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=1.0)
+            )
+        elif p == "repl":  # serving: weights replicated over DP axes
+            overrides["serve_repl"] = True
+        elif p == "don":  # serving: donate the KV cache (in-place update)
+            overrides["donate_cache"] = True
+        elif p == "ep":  # MoE: manual shard_map EP dispatch + psum combine
+            overrides["ep_shard_map"] = True
+        else:
+            raise ValueError(f"unknown plan component {p!r} in {plan!r}")
+    return cfg, overrides

@@ -1,0 +1,70 @@
+"""ShapeDtypeStruct stand-ins for every model input — shardable, weak-type
+correct, zero device allocation. This is what the dry-run lowers against.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES
+from repro.models.config import ModelConfig
+from repro.models.transformer import init_caches
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, seq: int, gb: int) -> dict:
+    b: dict = {"targets": sds((gb, seq), jnp.int32)}
+    if cfg.frontend:
+        b["embeds"] = sds((gb, seq, cfg.d_model), jnp.bfloat16)
+    else:
+        b["tokens"] = sds((gb, seq), jnp.int32)
+    if cfg.is_encdec:
+        b["enc_embeds"] = sds((gb, seq, cfg.d_model), jnp.bfloat16)
+    return b
+
+
+def prefill_batch_specs(cfg: ModelConfig, seq: int, gb: int) -> dict:
+    b: dict = {}
+    if cfg.frontend:
+        b["embeds"] = sds((gb, seq, cfg.d_model), jnp.bfloat16)
+    else:
+        b["tokens"] = sds((gb, seq), jnp.int32)
+    if cfg.is_encdec:
+        b["enc_embeds"] = sds((gb, seq, cfg.d_model), jnp.bfloat16)
+    return b
+
+
+def decode_batch_specs(cfg: ModelConfig, seq: int, gb: int) -> dict:
+    b: dict = {"pos": sds((), jnp.int32)}
+    if cfg.frontend:
+        b["embed"] = sds((gb, 1, cfg.d_model), jnp.bfloat16)
+    else:
+        b["token"] = sds((gb, 1), jnp.int32)
+    if cfg.is_encdec:
+        # decode consumes the PREcomputed encoder output (from prefill);
+        # re-running the encoder per token would waste ~all decode FLOPs.
+        b["enc_out"] = sds((gb, seq, cfg.d_model), jnp.bfloat16)
+    return b
+
+
+def cache_specs_shapes(cfg: ModelConfig, gb: int, max_seq: int):
+    """Shape pytree of the decode caches (eval_shape over init_caches)."""
+    return jax.eval_shape(lambda: init_caches(cfg, gb, max_seq, jnp.bfloat16))
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """All ShapeDtypeStructs for one (arch × shape) cell."""
+    seq, gb, kind = SHAPES[shape_name]
+    if kind == "train":
+        return dict(kind="train", batch=train_batch_specs(cfg, seq, gb))
+    if kind == "prefill":
+        return dict(kind="prefill", batch=prefill_batch_specs(cfg, seq, gb), max_seq=seq)
+    # decode: KV cache of length `seq` already in memory, one new token.
+    return dict(
+        kind="decode",
+        batch=decode_batch_specs(cfg, seq, gb),
+        caches=cache_specs_shapes(cfg, gb, seq),
+    )

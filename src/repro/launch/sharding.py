@@ -1,0 +1,159 @@
+"""Sharding rules: config + mesh → PartitionSpecs for params / opt state /
+batches / caches.
+
+Baseline layout (hillclimbed variants in launch/dryrun.py --plan):
+  - 2D FSDP×TP: every big matrix shards its input-ish dim over the
+    data-parallel axes and its output-ish dim over `model`;
+  - MoE experts shard over `model` (expert parallelism), expert weights'
+    d_model dim over FSDP;
+  - KV caches: batch over DP; kv-heads over `model` when divisible, else
+    the sequence dim when divisible, else replicated;
+  - optimizer states inherit the parameter specs (ZeRO-1 for free).
+A dim is only assigned a mesh axis when its size divides the axis size —
+`_fit` degrades gracefully for the reduced smoke configs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def _axis_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def _fit(mesh, axes, dim: int):
+    """Return axes if dim divides their product size, else None."""
+    return axes if axes is not None and dim % _axis_size(mesh, axes) == 0 else None
+
+
+def param_spec(path: str, shape: tuple[int, ...], mesh, *, fsdp) -> P:
+    """Spec for one parameter leaf; `path` is the '/'.joined key path."""
+    name = path.split("/")[-1]
+    nd = len(shape)
+
+    def spec(*entries):
+        # pad with None for any leading stacked-group dims
+        return P(*([None] * (nd - len(entries)) + list(entries)))
+
+    if name in ("embed", "unembed"):
+        a, b = shape[-2], shape[-1]
+        return P(_fit(mesh, fsdp, a), _fit(mesh, "model", b))
+    if name in ("wq", "wk", "wv"):  # [.., d, H, hd]
+        return spec(_fit(mesh, fsdp, shape[-3]), _fit(mesh, "model", shape[-2]), None)
+    if name == "wo":  # [.., H, hd, d]
+        return spec(_fit(mesh, "model", shape[-3]), None, _fit(mesh, fsdp, shape[-1]))
+    if name in ("bq", "bk", "bv"):  # [.., H, hd]
+        return spec(_fit(mesh, "model", shape[-2]), None)
+    if name in ("w_gate", "w_in", "w_out"):
+        if "moe" in path:
+            # experts: EP over model on E; FSDP on the d_model dim
+            if name == "w_out":  # [.., E, f, d]
+                return spec(_fit(mesh, "model", shape[-3]), None, _fit(mesh, fsdp, shape[-1]))
+            return spec(_fit(mesh, "model", shape[-3]), _fit(mesh, fsdp, shape[-2]), None)
+        if name == "w_out":  # [.., f, d]
+            return spec(_fit(mesh, "model", shape[-2]), _fit(mesh, fsdp, shape[-1]))
+        return spec(_fit(mesh, fsdp, shape[-2]), _fit(mesh, "model", shape[-1]))
+    if name == "router":  # [.., d, E]
+        return spec(_fit(mesh, fsdp, shape[-2]), None)
+    if name == "in_proj":  # [.., d, e]
+        return spec(_fit(mesh, fsdp, shape[-2]), _fit(mesh, "model", shape[-1]))
+    if name == "out_proj":  # [.., d_in, d]
+        return spec(_fit(mesh, "model", shape[-2]), _fit(mesh, fsdp, shape[-1]))
+    if name in ("conv_w",):  # [.., K, c]
+        return spec(None, _fit(mesh, "model", shape[-1]))
+    if name in ("conv_b", "out_norm"):
+        return spec(_fit(mesh, "model", shape[-1]))
+    if name in ("dt_bias", "A_log", "D"):
+        return spec(_fit(mesh, "model", shape[-1]))
+    # norms, scalars → replicated
+    return P(*([None] * nd))
+
+
+def _tree_specs(tree, mesh, fsdp, prefix=""):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    specs = []
+    for path, leaf in flat:
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        specs.append(param_spec(pstr, leaf.shape, mesh, fsdp=fsdp))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_shardings(cfg: ModelConfig, params_shape, mesh, fsdp=None):
+    """Pytree of NamedShardings matching a params (shape-)pytree.
+
+    fsdp=() replicates weights over the DP axes (serving layout: no
+    per-step parameter all-gathers, at the cost of HBM).
+    """
+    from repro.launch.mesh import dp_axes
+
+    if fsdp is None:
+        fsdp = dp_axes(mesh)
+    specs = _tree_specs(params_shape, mesh, fsdp if fsdp else None)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_state_shardings(param_shard, mesh):
+    """mu/nu inherit parameter shardings; step replicated (ZeRO-1)."""
+    return dict(
+        mu=param_shard,
+        nu=param_shard,
+        step=NamedSharding(mesh, P()),
+    )
+
+
+def cache_specs(cfg: ModelConfig, cache_shape, mesh):
+    """Shardings for the decode caches (leading dim = groups)."""
+    from repro.launch.mesh import dp_axes
+
+    fsdp = dp_axes(mesh)
+
+    def one(path, leaf):
+        name = str(getattr(path[-1], "key", ""))
+        shape = leaf.shape
+        nd = len(shape)
+        if name in ("k", "v"):  # [G, B, S, Hkv, hd]
+            b = _fit(mesh, fsdp, shape[1])
+            heads = _fit(mesh, "model", shape[3])
+            seq = None if heads else _fit(mesh, "model", shape[2])
+            return P(None, b, seq, heads, None)
+        if name == "state":  # [G, B, nh, p, n]
+            return P(None, _fit(mesh, fsdp, shape[1]), _fit(mesh, "model", shape[2]), None, None)
+        if name == "conv":  # [G, B, K-1, c]
+            return P(None, _fit(mesh, fsdp, shape[1]), None, _fit(mesh, "model", shape[3]))
+        if name == "pos":
+            return P()
+        return P(*([None] * nd))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shape)
+    specs = [one(path, leaf) for path, leaf in flat]
+    tree = jax.tree_util.tree_unflatten(treedef, specs)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_shardings(batch_shape, mesh):
+    """Token/embed batches: leading batch dim over DP axes; scalars replicated."""
+    from repro.launch.mesh import dp_axes
+
+    fsdp = dp_axes(mesh)
+
+    def one(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        b = _fit(mesh, fsdp, leaf.shape[0])
+        return NamedSharding(mesh, P(*([b] + [None] * (leaf.ndim - 1))))
+
+    return jax.tree.map(one, batch_shape)

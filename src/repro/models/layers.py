@@ -1,0 +1,157 @@
+"""Transformer layer primitives (pure-functional JAX).
+
+Covers every attention variant the assigned architectures need: GQA,
+sliding-window (gemma2 local layers), attention/logit soft-capping, QK-norm
+(qwen3), QKV bias (qwen2), RoPE and M-RoPE (qwen2-vl), cross-attention
+(seamless enc-dec). bf16 params / f32 accumulation throughout.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+NEG_INF = -2.0e38
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def _rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float, mrope_sections=None) -> jax.Array:
+    """x: [B, S, H, D]; positions: [B, S] or [3, B, S] for M-RoPE."""
+    D = x.shape[-1]
+    freqs = _rope_freqs(D, theta)  # [D/2]
+    if positions.ndim == 2:
+        angles = positions[..., None].astype(jnp.float32) * freqs  # [B,S,D/2]
+    else:
+        # M-RoPE: frequency bands partitioned into (t, h, w) sections.
+        t_sec, h_sec, w_sec = mrope_sections
+        sec = jnp.concatenate(
+            [jnp.zeros(t_sec, jnp.int32), jnp.ones(h_sec, jnp.int32), jnp.full(w_sec, 2, jnp.int32)]
+        )  # [D/2] → which positional stream drives each band
+        pos = jnp.take(positions, sec, axis=0)  # [D/2, B, S]
+        angles = jnp.moveaxis(pos, 0, -1).astype(jnp.float32) * freqs  # [B,S,D/2]
+    sin, cos = jnp.sin(angles)[:, :, None, :], jnp.cos(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _attn_mask(S_q: int, S_kv: int, *, causal: bool, window: Optional[int], offset: int = 0):
+    """[S_q, S_kv] additive mask. `offset` = absolute position of query 0."""
+    q_pos = jnp.arange(S_q)[:, None] + offset
+    k_pos = jnp.arange(S_kv)[None, :]
+    ok = jnp.ones((S_q, S_kv), bool)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window is not None:
+        ok &= k_pos > q_pos - window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def attention(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,  # [B, S, d]
+    positions: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    kv_x: Optional[jax.Array] = None,  # cross-attention source
+    cache: Optional[dict] = None,  # {"k","v": [B,Smax,Hkv,hd], "pos": scalar}
+) -> tuple[jax.Array, Optional[dict]]:
+    B, S, _ = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    src = x if kv_x is None else kv_x
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if kv_x is None:  # RoPE only for self-attention
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        kv_pos = positions if cache is None else positions
+        k = apply_rope(k, kv_pos, cfg.rope_theta, cfg.mrope_sections)
+
+    if cache is not None:
+        # Decode: write this step's K/V at `pos`, attend over the full cache.
+        pos = cache["pos"]
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+        k, v = ck, cv
+        new_cache = dict(k=ck, v=cv, pos=pos + S)
+        S_kv = k.shape[1]
+        q_pos = pos + jnp.arange(S)[:, None]  # absolute query positions
+        k_pos = jnp.arange(S_kv)[None, :]
+        kmask = k_pos <= q_pos  # causal over written slots
+        if window is not None:
+            kmask &= k_pos > q_pos - window
+        mask = jnp.where(kmask, 0.0, NEG_INF).astype(jnp.float32)
+    else:
+        new_cache = None
+        S_kv = k.shape[1]
+        mask = _attn_mask(S, S_kv, causal=causal and kv_x is None, window=window)
+
+    G = H // Hkv
+    qf = q.astype(jnp.float32).reshape(B, S, Hkv, G, hd)
+    scores = jnp.einsum("bshgk,bthk->bhgst", qf, k.astype(jnp.float32)) / jnp.sqrt(hd)
+    if cfg.attn_softcap:
+        scores = cfg.attn_softcap * jnp.tanh(scores / cfg.attn_softcap)
+    scores = scores + mask
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgst,bthk->bshgk", w, v.astype(jnp.float32))
+    out = out.reshape(B, S, H, hd).astype(x.dtype)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
+
+
+def mlp(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    h = act(jnp.einsum("bsd,df->bsf", x, p["w_gate"])) * jnp.einsum("bsd,df->bsf", x, p["w_in"])
+    return jnp.einsum("bsf,fd->bsd", h, p["w_out"])
+
+
+# ------------------------------------------------------------------ init
+
+
+def init_attention(cfg: ModelConfig, key, dtype, cross: bool = False) -> dict:
+    H, Hkv, hd, d = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_, cfg.d_model
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, H, hd)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, Hkv, hd)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, Hkv, hd)) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (H, hd, d)) * (H * hd) ** -0.5).astype(dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), dtype)
+        p["bk"] = jnp.zeros((Hkv, hd), dtype)
+        p["bv"] = jnp.zeros((Hkv, hd), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def init_mlp(cfg: ModelConfig, key, dtype, d_ff: Optional[int] = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": (jax.random.normal(ks[0], (d, f)) * d ** -0.5).astype(dtype),
+        "w_in": (jax.random.normal(ks[1], (d, f)) * d ** -0.5).astype(dtype),
+        "w_out": (jax.random.normal(ks[2], (f, d)) * f ** -0.5).astype(dtype),
+    }

@@ -1,0 +1,83 @@
+"""Activation-sharding context: the launcher declares which mesh axes carry
+data parallelism / tensor parallelism, and the model applies
+with_sharding_constraint at group boundaries so GSPMD never silently
+replicates activations (the embedding gather otherwise drops the batch
+sharding and every downstream tensor blows up replicated).
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+import threading
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+@contextlib.contextmanager
+def activation_axes(mesh, dp=("data",), tp="model", sp=None, unroll_scan=False,
+                    ep_shard_map=False):
+    """dp: data-parallel axes (batch dim); tp: tensor axis; sp: sequence axis.
+
+    unroll_scan=True unrolls the layer-group scan at lowering time — the
+    dry-run uses it so cost_analysis counts every layer (XLA reports a
+    while-loop body's FLOPs once, not x trip count).
+    ep_shard_map=True routes MoE through the manual shard_map dispatch
+    (local expert gather + psum combine) instead of GSPMD's scatter.
+    """
+    sizes = dict(mesh.shape)
+    prev = getattr(_state, "axes", None)
+    _state.axes = dict(dp=dp, tp=tp, sp=sp, sizes=sizes, unroll_scan=unroll_scan,
+                       ep_shard_map=ep_shard_map, mesh=mesh)
+    try:
+        yield
+    finally:
+        _state.axes = prev
+
+
+def scan_unroll() -> bool:
+    a = axes()
+    return bool(a and a.get("unroll_scan"))
+
+
+def ep_shard_map():
+    """Returns (mesh, dp_axes, tp_axis) when the manual EP path is on."""
+    a = axes()
+    if a and a.get("ep_shard_map"):
+        return a["mesh"], a["dp"], a["tp"]
+    return None
+
+
+def axes():
+    return getattr(_state, "axes", None)
+
+
+def _size(sizes, v) -> int:
+    if v is None:
+        return 1
+    if isinstance(v, str):
+        return sizes.get(v, 1)
+    return math.prod(sizes.get(a, 1) for a in v)
+
+
+def constrain(x, *dims):
+    """dims entries: 'dp' | 'tp' | 'sp' | None per tensor dim."""
+    a = axes()
+    if a is None:
+        return x
+    entries = []
+    used: set = set()
+    for i, d in enumerate(dims):
+        v = a.get(d) if d is not None else None
+        flat = (v,) if isinstance(v, str) else tuple(v or ())
+        if (v is not None and x.shape[i] % _size(a["sizes"], v) == 0
+                and not (set(flat) & used)):
+            entries.append(v)
+            used |= set(flat)
+        else:
+            entries.append(None)
+    if all(e is None for e in entries):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*entries))

@@ -1,0 +1,180 @@
+"""Mamba2 SSD (state-space duality) block — chunked parallel form + O(1) decode.
+
+Implements the chunk decomposition from the Mamba2 paper: within-chunk
+quadratic ("attention-like") term on the MXU + cross-chunk linear state
+recurrence, which is the TPU-native way to run an SSM over long sequences
+(the sequential scan form would serialize the MXU).
+
+Shapes: x [B, S, d_model] → d_inner = expand*d_model split into
+nh = d_inner/head_dim heads of size P; state size N per head (one shared
+B/C group, as in mamba2's default ngroups=1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import rms_norm
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: [..., L] → out[..., i, j] = sum_{k=j+1..i} a_k  (i >= j), -inf else."""
+    L = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]  # sum_{j+1..i} = cum_i - cum_j
+    ii = jnp.arange(L)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def pick_chunk(S: int, chunk: int) -> int:
+    """Largest divisor of S that is <= chunk (trace-time helper)."""
+    c = min(chunk, S)
+    while S % c:
+        c -= 1
+    return c
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int):
+    """SSD forward.
+
+    x: [b, s, h, p]; dt: [b, s, h] (positive); A: [h] (negative);
+    Bm, Cm: [b, s, n] (single group). Returns y [b, s, h, p] and the final
+    state [b, h, p, n].
+    """
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    assert s % chunk == 0
+    nc, cl = s // chunk, chunk
+
+    xr = x.reshape(b, nc, cl, h, p)
+    dtr = dt.reshape(b, nc, cl, h)
+    Br = Bm.reshape(b, nc, cl, n)
+    Cr = Cm.reshape(b, nc, cl, n)
+    a = dtr * A[None, None, None, :]  # [b,nc,cl,h] log-decay per step
+    a_hsplit = jnp.moveaxis(a, -1, 2)  # [b,nc,h,cl]
+
+    # 1) within-chunk (diagonal blocks): attention-like quadratic term.
+    L = jnp.exp(_segsum(a_hsplit))  # [b,nc,h,cl,cl]
+    scores = jnp.einsum("bcin,bcjn->bcij", Cr, Br)  # [b,nc,cl,cl]
+    y_diag = jnp.einsum("bcij,bchij,bcjh,bcjhp->bcihp", scores, L, dtr, xr)
+
+    # 2) chunk-final states: decayed sum of inputs within each chunk.
+    a_cum = jnp.cumsum(a_hsplit, axis=-1)  # [b,nc,h,cl]
+    a_tail = a_cum[..., -1:] - a_cum  # decay from step j to chunk end
+    states = jnp.einsum("bchj,bcjh,bcjn,bcjhp->bchpn", jnp.exp(a_tail), dtr, Br, xr)
+
+    # 3) cross-chunk recurrence: H_c = H_{c-1}·exp(sum a_c) + states_c.
+    chunk_decay = jnp.exp(a_cum[..., -1])  # [b,nc,h]
+
+    def step(carry, inp):
+        dec, st = inp
+        new = carry * dec[..., None, None] + st
+        return new, carry  # emit the state *entering* this chunk
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    last, h_prev = jax.lax.scan(
+        step,
+        init,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0)),
+    )
+    h_prev = jnp.moveaxis(h_prev, 0, 1)  # [b,nc,h,p,n]
+
+    # 4) off-diagonal contribution: decayed incoming state read by C.
+    decay_in = jnp.exp(a_cum)  # [b,nc,h,cl]: decay from chunk start to step i
+    y_off = jnp.einsum("bcin,bchi,bchpn->bcihp", Cr, decay_in, h_prev)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, last
+
+
+def ssm_block(cfg: ModelConfig, p: dict, x: jax.Array, *, cache: dict | None = None):
+    """Full mamba2 mixer. x: [B, S, d]. cache: {"state": [B,h,p,n], "conv": [B,K-1,c]}."""
+    s = cfg.ssm
+    B_, S, d = x.shape
+    d_in = s.expand * d
+    nh = d_in // s.head_dim
+    n = s.d_state
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xs, Bm, Cm, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1
+    )
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)  # [B,S,c]; c = d_in+2n
+
+    K = s.d_conv
+    if cache is not None:
+        prev = cache["conv"]  # [B, K-1, c]
+        padded = jnp.concatenate([prev, conv_in], axis=1)
+        new_conv_state = padded[:, -(K - 1) :, :]
+    else:
+        padded = jnp.pad(conv_in, ((0, 0), (K - 1, 0), (0, 0)))
+        new_conv_state = padded[:, -(K - 1) :, :]
+    # causal depthwise conv.
+    conv_out = sum(
+        padded[:, i : i + S, :] * p["conv_w"][i][None, None, :] for i in range(K)
+    )
+    conv_out = jax.nn.silu(conv_out + p["conv_b"][None, None, :])
+    xs, Bm, Cm = jnp.split(conv_out, [d_in, d_in + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])  # [B,S,nh]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # [nh]
+    xh = xs.astype(jnp.float32).reshape(B_, S, nh, s.head_dim)
+
+    if cache is not None and S > 1:
+        # Prefill with a fresh cache: chunked SSD from zero state (the
+        # engine only prefills into empty caches), keep the final state.
+        cl = pick_chunk(S, s.chunk)
+        y, state = ssd_chunked(xh, dt, A, Bm.astype(jnp.float32), Cm.astype(jnp.float32), cl)
+        new_cache = dict(state=state, conv=new_conv_state)
+    elif cache is not None:
+        # O(1) decode: state update per step (S is small, typically 1).
+        state = cache["state"]  # [B,nh,p,n]
+
+        def one(state, inp):
+            xt, dtt, Bt, Ct = inp  # [B,nh,p],[B,nh],[B,n],[B,n]
+            dec = jnp.exp(dtt * A[None, :])  # [B,nh]
+            state = state * dec[..., None, None] + jnp.einsum(
+                "bh,bn,bhp->bhpn", dtt, Bt, xt
+            )
+            y = jnp.einsum("bn,bhpn->bhp", Ct, state)
+            return state, y
+
+        xt = jnp.moveaxis(xh, 1, 0)
+        state, ys = jax.lax.scan(
+            one,
+            state,
+            (xt, jnp.moveaxis(dt, 1, 0), jnp.moveaxis(Bm.astype(jnp.float32), 1, 0), jnp.moveaxis(Cm.astype(jnp.float32), 1, 0)),
+        )
+        y = jnp.moveaxis(ys, 0, 1)  # [B,S,nh,p]
+        new_cache = dict(state=state, conv=new_conv_state)
+    else:
+        y, state = ssd_chunked(xh, dt, A, Bm.astype(jnp.float32), Cm.astype(jnp.float32), pick_chunk(S, s.chunk))
+        new_cache = dict(state=state, conv=new_conv_state)
+
+    y = y + xh * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B_, S, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"]), new_cache
+
+
+def init_ssm(cfg: ModelConfig, key, dtype) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    nh = d_in // s.head_dim
+    n = s.d_state
+    c = d_in + 2 * n
+    e = 2 * d_in + 2 * n + nh
+    ks = jax.random.split(key, 3)
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, e)) * d ** -0.5).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, c)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((c,), dtype),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "out_norm": jnp.zeros((d_in,), dtype),
+        "out_proj": (jax.random.normal(ks[2], (d_in, d)) * d_in ** -0.5).astype(dtype),
+    }

@@ -1,0 +1,97 @@
+"""Train / prefill / decode step functions — the units the launcher jits
+and the dry-run lowers.
+
+Batch dicts (see launch/shapes.py input_specs):
+  train:   {tokens|embeds, targets, (enc_tokens|enc_embeds)}
+  prefill: {tokens|embeds, (enc_*)}                → caches + last logits
+  decode:  {token [B,1]|embed, caches, (enc_*)}    → next logits + caches
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import forward, init_caches
+from repro.optim.adam import AdamWConfig, apply_updates
+
+
+def lm_loss(cfg: ModelConfig, params, batch, *, remat: bool = True,
+            vocab_parallel: bool = False):
+    logits, _ = forward(
+        cfg, params,
+        tokens=batch.get("tokens"),
+        embeds=batch.get("embeds"),
+        enc_tokens=batch.get("enc_tokens"),
+        enc_embeds=batch.get("enc_embeds"),
+        remat=remat,
+    )
+    targets = batch["targets"]
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    if vocab_parallel:
+        # Megatron-style: with logits sharded on vocab, take_along_axis
+        # forces an all-gather of the full [B,S,V] tensor. A one-hot
+        # contraction keeps the reduction local per vocab shard and
+        # all-reduces only [B,S] scalars.
+        onehot = jax.nn.one_hot(targets, cfg.vocab, dtype=logits.dtype)
+        tgt = jnp.einsum("bsv,bsv->bs", logits, onehot).astype(jnp.float32)
+    else:
+        tgt = jnp.take_along_axis(
+            logits.astype(jnp.float32), targets[..., None], axis=-1
+        )[..., 0]
+    nll = lse - tgt
+    return nll.mean(), dict(loss=nll.mean())
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamWConfig, *, remat: bool = True,
+                    vocab_parallel: bool = False):
+    def train_step(params, opt_state, batch):
+        (loss, aux), grads = jax.value_and_grad(
+            lambda p: lm_loss(cfg, p, batch, remat=remat,
+                              vocab_parallel=vocab_parallel),
+            has_aux=True,
+        )(params)
+        params, opt_state, om = apply_updates(params, grads, opt_state, opt)
+        return params, opt_state, dict(loss=loss, **om)
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_seq: int):
+    def prefill_step(params, batch):
+        B = (batch.get("tokens") if "tokens" in batch else batch["embeds"]).shape[0]
+        caches = init_caches(cfg, B, max_seq)
+        logits, caches = forward(
+            cfg, params,
+            tokens=batch.get("tokens"),
+            embeds=batch.get("embeds"),
+            enc_tokens=batch.get("enc_tokens"),
+            enc_embeds=batch.get("enc_embeds"),
+            caches=caches,
+            cache_pos=jnp.int32(0),
+            remat=False,
+        )
+        return logits[:, -1], caches
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One decode step: token [B,1] + caches → logits [B,vocab] + caches."""
+
+    def serve_step(params, caches, batch):
+        pos = batch["pos"]  # [] int32: current length of the cache
+        logits, caches = forward(
+            cfg, params,
+            tokens=batch.get("token"),
+            embeds=batch.get("embed"),
+            enc_embeds=batch.get("enc_embeds"),
+            enc_tokens=batch.get("enc_tokens"),
+            enc_out=batch.get("enc_out"),  # precomputed at prefill (enc-dec)
+            caches=caches,
+            cache_pos=pos,
+            remat=False,
+        )
+        return logits[:, -1], caches
+
+    return serve_step

@@ -1,0 +1,205 @@
+"""Model assembly: decoder-only / encoder-decoder / hybrid stacks.
+
+Layers are organized as GROUPS (cfg.group = tuple of LayerSpec) scanned
+n_groups times — one lowered group body regardless of depth, which keeps
+dry-run compiles fast and enables jax.checkpoint per group (remat policy).
+Caches (KV / SSM state / conv state) are pytrees stacked along the group
+axis and threaded through the same scan.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import pspec
+from repro.models import ssm as SSM
+from repro.models.config import LayerSpec, ModelConfig
+from repro.models.pspec import constrain
+
+
+# ----------------------------------------------------------------- params
+
+
+def _init_layer(cfg: ModelConfig, spec: LayerSpec, key, dtype) -> dict:
+    ks = iter(jax.random.split(key, 8))
+    p: dict = {"pre_norm": jnp.zeros((cfg.d_model,), dtype)}
+    if spec.kind == "attn":
+        p["attn"] = L.init_attention(cfg, next(ks), dtype)
+    else:
+        p["ssm"] = SSM.init_ssm(cfg, next(ks), dtype)
+    if spec.cross_attn:
+        p["cross_norm"] = jnp.zeros((cfg.d_model,), dtype)
+        p["cross"] = L.init_attention(cfg, next(ks), dtype, cross=True)
+    if spec.mlp == "dense":
+        p["mlp_norm"] = jnp.zeros((cfg.d_model,), dtype)
+        p["mlp"] = L.init_mlp(cfg, next(ks), dtype)
+    elif spec.mlp == "moe":
+        p["mlp_norm"] = jnp.zeros((cfg.d_model,), dtype)
+        p["moe"] = MOE.init_moe(cfg, next(ks), dtype)
+    return p
+
+
+def _init_group(cfg: ModelConfig, group, key, dtype) -> dict:
+    ks = jax.random.split(key, len(group))
+    return {f"layer_{i}": _init_layer(cfg, spec, ks[i], dtype) for i, spec in enumerate(group)}
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.bfloat16) -> dict:
+    k_emb, k_groups, k_enc, k_out = jax.random.split(key, 4)
+    d = cfg.d_model
+    params: dict = {
+        "embed": (jax.random.normal(k_emb, (cfg.vocab, d)) * d ** -0.5).astype(dtype),
+        "final_norm": jnp.zeros((d,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = (jax.random.normal(k_out, (d, cfg.vocab)) * d ** -0.5).astype(dtype)
+    gkeys = jax.random.split(k_groups, cfg.n_groups)
+    params["groups"] = jax.vmap(lambda k: _init_group(cfg, cfg.group, k, dtype))(gkeys)
+    if cfg.is_encdec:
+        enc_spec = (LayerSpec(kind="attn", mlp="dense"),)
+        ekeys = jax.random.split(k_enc, cfg.n_enc_layers)
+        params["enc_groups"] = jax.vmap(lambda k: _init_group(cfg, enc_spec, k, dtype))(ekeys)
+        params["enc_final_norm"] = jnp.zeros((d,), dtype)
+    return params
+
+
+# ---------------------------------------------------------------- forward
+
+
+def _apply_layer(cfg, spec: LayerSpec, p, x, positions, *, causal, enc_out=None, cache=None):
+    new_cache = {}
+    h = L.rms_norm(x, p["pre_norm"], cfg.norm_eps)
+    if spec.kind == "attn":
+        h, kv = L.attention(
+            cfg, p["attn"], h, positions,
+            causal=causal, window=spec.sliding_window,
+            cache=None if cache is None else cache["kv"],
+        )
+        if cache is not None:
+            new_cache["kv"] = kv
+    else:
+        h, st = SSM.ssm_block(cfg, p["ssm"], h, cache=None if cache is None else cache["ssm"])
+        if cache is not None:
+            new_cache["ssm"] = st
+    x = x + h
+    if spec.cross_attn:
+        h = L.rms_norm(x, p["cross_norm"], cfg.norm_eps)
+        h, _ = L.attention(cfg, p["cross"], h, positions, causal=False, kv_x=enc_out)
+        x = x + h
+    if spec.mlp != "none":
+        h = L.rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+        h = L.mlp(cfg, p["mlp"], h) if spec.mlp == "dense" else MOE.moe_ffn_ep(cfg, p["moe"], h)
+        x = x + h
+    return x, new_cache
+
+
+def _run_stack(cfg, groups_params, group_spec, x, positions, *, causal, enc_out=None, caches=None, remat=True):
+    """Scan over stacked groups. caches: pytree with leading n_groups axis."""
+
+    def group_fn(carry, scanned):
+        xc = constrain(carry, "dp", "sp", None)
+        gp = scanned[0]
+        gc = scanned[1] if caches is not None else None
+        new_gc = {}
+        for i, spec in enumerate(group_spec):
+            lc = None if gc is None else gc[f"layer_{i}"]
+            xc, nc = _apply_layer(
+                cfg, spec, gp[f"layer_{i}"], xc, positions,
+                causal=causal, enc_out=enc_out, cache=lc,
+            )
+            new_gc[f"layer_{i}"] = nc
+        return xc, (new_gc if caches is not None else None)
+
+    fn = jax.checkpoint(group_fn) if remat else group_fn
+    xs = (groups_params,) if caches is None else (groups_params, caches)
+    n_groups = jax.tree.leaves(groups_params)[0].shape[0]
+    unroll = n_groups if pspec.scan_unroll() else 1
+    x, new_caches = jax.lax.scan(fn, x, xs, unroll=unroll)
+    return x, new_caches
+
+
+def forward(
+    cfg: ModelConfig,
+    params: dict,
+    *,
+    tokens: Optional[jax.Array] = None,  # [B, S]
+    embeds: Optional[jax.Array] = None,  # [B, S, d] (modality frontend stub)
+    positions: Optional[jax.Array] = None,
+    enc_tokens: Optional[jax.Array] = None,
+    enc_embeds: Optional[jax.Array] = None,
+    enc_out: Optional[jax.Array] = None,  # precomputed encoder output (decode)
+    caches=None,
+    cache_pos: Optional[jax.Array] = None,
+    remat: bool = True,
+):
+    """Returns (logits [B,S,vocab], new_caches)."""
+    if embeds is None:
+        x = params["embed"][tokens]
+    else:
+        x = embeds
+    x = constrain(x, "dp", "sp", None)
+    B, S = x.shape[:2]
+    if positions is None:
+        base = jnp.arange(S)[None, :] + (0 if cache_pos is None else cache_pos)
+        positions = jnp.broadcast_to(base, (B, S))
+        if cfg.mrope_sections is not None:
+            positions = jnp.broadcast_to(positions[None], (3, B, S))
+
+    if cfg.is_encdec and enc_out is None:
+        if enc_embeds is None and enc_tokens is not None:
+            enc_embeds = params["embed"][enc_tokens]
+        if enc_embeds is not None:
+            Se = enc_embeds.shape[1]
+            enc_pos = jnp.broadcast_to(jnp.arange(Se)[None, :], (B, Se))
+            enc_spec = (LayerSpec(kind="attn", mlp="dense"),)
+            enc_out, _ = _run_stack(
+                cfg, params["enc_groups"], enc_spec, enc_embeds, enc_pos,
+                causal=False, remat=remat,
+            )
+            enc_out = L.rms_norm(enc_out, params["enc_final_norm"], cfg.norm_eps)
+
+    x, new_caches = _run_stack(
+        cfg, params["groups"], cfg.group, x, positions,
+        causal=True, enc_out=enc_out, caches=caches, remat=remat and caches is None,
+    )
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = jnp.einsum("bsd,dv->bsv", x, unembed)
+    logits = constrain(logits, "dp", "sp", "tp")  # vocab-parallel logits
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return logits, new_caches
+
+
+# ----------------------------------------------------------------- caches
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    """Cache pytree stacked along the group axis (leading dim n_groups)."""
+
+    def one_layer(spec: LayerSpec):
+        c = {}
+        if spec.kind == "attn":
+            c["kv"] = dict(
+                k=jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.head_dim_), dtype),
+                v=jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.head_dim_), dtype),
+                pos=jnp.int32(0),
+            )
+        else:
+            s = cfg.ssm
+            d_in = s.expand * cfg.d_model
+            nh = d_in // s.head_dim
+            c["ssm"] = dict(
+                state=jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
+                conv=jnp.zeros((batch, s.d_conv - 1, d_in + 2 * s.d_state), dtype),
+            )
+        return c
+
+    group_cache = {f"layer_{i}": one_layer(spec) for i, spec in enumerate(cfg.group)}
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_groups,) + x.shape), group_cache
+    )

@@ -1,0 +1,28 @@
+import numpy as np
+import pytest
+
+from repro.core.types import Graph
+from repro.graph.generate import make_graph
+
+
+@pytest.fixture(scope="session")
+def tiny_powerlaw() -> Graph:
+    return make_graph("tiny_powerlaw")
+
+
+@pytest.fixture(scope="session")
+def tiny_road() -> Graph:
+    return make_graph("tiny_road")
+
+
+@pytest.fixture(scope="session")
+def paper_example() -> Graph:
+    """The 6-vertex undirected example from the paper's Fig. 1 / App. B.
+
+    Vertices A..F = 0..5; undirected edges {AB, AC, AD, AE, AF, BC}
+    stored as two directed edges each (paper §III).
+    """
+    und = [(0, 1), (0, 2), (0, 3), (0, 4), (0, 5), (1, 2)]
+    src = np.array([u for u, v in und] + [v for u, v in und], np.int32)
+    dst = np.array([v for u, v in und] + [u for u, v in und], np.int32)
+    return Graph(src=src, dst=dst, num_vertices=6)

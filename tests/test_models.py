@@ -1,0 +1,136 @@
+"""Per-arch smoke tests (reduced configs) + decode-vs-full consistency +
+SSD correctness + config parameter counts vs published sizes."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.models.config import ModelConfig
+from repro.models.ssm import ssd_chunked
+from repro.models.steps import make_serve_step, make_train_step
+from repro.models.transformer import forward, init_caches, init_params
+from repro.optim.adam import AdamWConfig, init_opt_state
+
+B, S = 2, 32
+OPT = AdamWConfig(warmup_steps=2, total_steps=10)
+
+
+def _batch(cfg: ModelConfig, rng):
+    batch = dict(targets=jnp.zeros((B, S), jnp.int32))
+    if cfg.frontend:
+        batch["embeds"] = jnp.array(rng.standard_normal((B, S, cfg.d_model)), jnp.float32)
+    else:
+        batch["tokens"] = jnp.array(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    if cfg.is_encdec:
+        batch["enc_embeds"] = jnp.array(rng.standard_normal((B, S, cfg.d_model)), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_arch_smoke_train_and_decode(arch):
+    """One train step + one decode step on a reduced same-family config:
+    output shapes correct, no NaNs."""
+    cfg = configs.reduced_config(arch)
+    rng = np.random.default_rng(0)
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    opt_state = init_opt_state(params, OPT)
+    batch = _batch(cfg, rng)
+    params, opt_state, metrics = jax.jit(make_train_step(cfg, OPT))(params, opt_state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    caches = init_caches(cfg, B, 64, jnp.float32)
+    dbatch = dict(pos=jnp.int32(0))
+    if cfg.frontend:
+        dbatch["embed"] = jnp.array(rng.standard_normal((B, 1, cfg.d_model)), jnp.float32)
+    else:
+        dbatch["token"] = jnp.zeros((B, 1), jnp.int32)
+    if cfg.is_encdec:
+        dbatch["enc_embeds"] = batch["enc_embeds"]
+    logits, _ = jax.jit(make_serve_step(cfg))(params, caches, dbatch)
+    assert logits.shape == (B, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize(
+    "arch", ["llama3_2_3b", "gemma2_27b", "mamba2_780m", "jamba_1_5_large",
+             "phi3_5_moe", "qwen2_vl_2b", "seamless_m4t_large_v2", "qwen3_4b"]
+)
+def test_decode_matches_full_forward(arch):
+    cfg = configs.reduced_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(1), jnp.float32)
+    rng = np.random.default_rng(0)
+    kw = {}
+    if cfg.frontend:
+        kw["embeds"] = jnp.array(rng.standard_normal((B, S, cfg.d_model)), jnp.float32)
+    else:
+        kw["tokens"] = jnp.array(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    if cfg.is_encdec:
+        kw["enc_embeds"] = jnp.array(rng.standard_normal((B, 8, cfg.d_model)), jnp.float32)
+    logits_full, _ = forward(cfg, params, **kw, remat=False)
+    half = S // 2
+    caches = init_caches(cfg, B, S, jnp.float32)
+    kw_pre = dict(kw)
+    for key in ("tokens", "embeds"):
+        if key in kw:
+            kw_pre[key] = kw[key][:, :half]
+    logits, caches = forward(cfg, params, **kw_pre, caches=caches, cache_pos=jnp.int32(0), remat=False)
+    outs = [logits]
+    for t in range(half, S):
+        kw_t = {k: v for k, v in kw.items() if k == "enc_embeds"}
+        for key in ("tokens", "embeds"):
+            if key in kw:
+                kw_t[key] = kw[key][:, t : t + 1]
+        lg, caches = forward(cfg, params, **kw_t, caches=caches, cache_pos=jnp.int32(t), remat=False)
+        outs.append(lg)
+    err = float(jnp.abs(jnp.concatenate(outs, axis=1) - logits_full).max())
+    assert err < 2e-3, f"{arch}: {err}"
+
+
+def test_ssd_chunked_matches_sequential():
+    rng = np.random.default_rng(0)
+    b, s, h, p, n = 2, 64, 3, 8, 16
+    x = jnp.array(rng.standard_normal((b, s, h, p)), jnp.float32)
+    dt = jnp.array(rng.random((b, s, h)) * 0.5 + 0.05, jnp.float32)
+    A = jnp.array(-np.exp(rng.standard_normal(h) * 0.3), jnp.float32)
+    Bm = jnp.array(rng.standard_normal((b, s, n)) * 0.5, jnp.float32)
+    Cm = jnp.array(rng.standard_normal((b, s, n)) * 0.5, jnp.float32)
+    state = jnp.zeros((b, h, p, n))
+    ys = []
+    for t in range(s):
+        dec = jnp.exp(dt[:, t] * A[None, :])
+        state = state * dec[..., None, None] + jnp.einsum("bh,bn,bhp->bhpn", dt[:, t], Bm[:, t], x[:, t])
+        ys.append(jnp.einsum("bn,bhpn->bhp", Cm[:, t], state))
+    y_ref = jnp.stack(ys, 1)
+    for chunk in (8, 32, 64):
+        y, st = ssd_chunked(x, dt, A, Bm, Cm, chunk)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(st), np.asarray(state), rtol=2e-4, atol=2e-4)
+
+
+def test_published_param_counts():
+    """Configs must land near the published model sizes."""
+    expect = {
+        "llama3_2_3b": 3.2e9,
+        "qwen2_72b": 72.7e9,
+        "gemma2_27b": 27.2e9,
+        "qwen3_4b": 4.0e9,
+        "phi3_5_moe": 41.9e9,
+        "kimi_k2": 1.04e12,
+        "jamba_1_5_large": 398e9,
+        "mamba2_780m": 0.78e9,
+    }
+    for arch, n in expect.items():
+        got = configs.get_config(arch).num_params()
+        assert abs(got - n) / n < 0.06, (arch, got, n)
+    # active params for the MoEs
+    assert abs(configs.get_config("kimi_k2").num_active_params() - 31e9) / 31e9 < 0.1
+    assert abs(configs.get_config("phi3_5_moe").num_active_params() - 6.6e9) / 6.6e9 < 0.05
+
+
+def test_shape_skip_rules():
+    assert "long_500k" in configs.runnable_shapes("mamba2_780m")
+    assert "long_500k" in configs.runnable_shapes("jamba_1_5_large")
+    assert "long_500k" not in configs.runnable_shapes("llama3_2_3b")
+    assert "long_500k" not in configs.runnable_shapes("gemma2_27b")
+    for a in configs.ARCHS:
+        assert "train_4k" in configs.runnable_shapes(a)

@@ -1,0 +1,114 @@
+"""Unit tests for the paper's partitioners (EBG + baselines)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    PARTITIONERS,
+    cvc_partition,
+    dbh_partition,
+    degree_sum_order,
+    ebg_partition,
+    ebg_partition_chunked,
+    ebg_partition_np,
+    metis_like_partition,
+    ne_partition,
+    partition_metrics,
+    random_hash_partition,
+)
+
+ALL = list(PARTITIONERS)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_every_edge_assigned_exactly_once(tiny_powerlaw, name):
+    p = 8
+    res = PARTITIONERS[name](tiny_powerlaw, p)
+    part = res.part_in_input_order()
+    assert part.shape == (tiny_powerlaw.num_edges,)
+    assert part.min() >= 0 and part.max() < p
+
+
+def test_jax_ebg_matches_numpy_oracle(tiny_powerlaw):
+    for p in (2, 5, 8):
+        a = ebg_partition(tiny_powerlaw, p)
+        b = ebg_partition_np(tiny_powerlaw, p)
+        np.testing.assert_array_equal(np.asarray(a.part), b.part)
+
+
+def test_chunked_block1_equals_faithful(tiny_powerlaw):
+    a = ebg_partition(tiny_powerlaw, 4)
+    b = ebg_partition_chunked(tiny_powerlaw, 4, block=1)
+    np.testing.assert_array_equal(np.asarray(a.part), np.asarray(b.part))
+
+
+def test_chunked_quality_close(tiny_powerlaw):
+    base = partition_metrics(tiny_powerlaw, ebg_partition(tiny_powerlaw, 8))
+    chnk = partition_metrics(tiny_powerlaw, ebg_partition_chunked(tiny_powerlaw, 8, block=256))
+    assert chnk.replication_factor < base.replication_factor * 1.10
+    assert chnk.edge_imbalance < 1.2
+
+
+def test_degree_sum_order(paper_example):
+    order = degree_sum_order(paper_example)
+    deg = paper_example.degrees()
+    src = np.asarray(paper_example.src)
+    dst = np.asarray(paper_example.dst)
+    keys = deg[src[order]] + deg[dst[order]]
+    assert (np.diff(keys) >= 0).all()
+
+
+def test_paper_example_partition(paper_example):
+    """Appendix B: EBG on the Fig.1 graph cuts exactly one vertex (A) and
+    groups {AB, AC, BC} vs {AD, AE, AF} — up to subgraph relabeling."""
+    res = ebg_partition(paper_example, 2)
+    m = partition_metrics(paper_example, res)
+    # one replicated vertex → rep factor = 7/6
+    assert abs(m.replication_factor - 7 / 6) < 1e-6
+    assert m.edge_imbalance == 1.0
+    part = res.part_in_input_order()
+    src = np.asarray(paper_example.src)
+    dst = np.asarray(paper_example.dst)
+    groups = {}
+    for e in range(len(part)):
+        key = frozenset((int(src[e]), int(dst[e])))
+        groups.setdefault(key, set()).add(int(part[e]))
+    # both directions of each undirected edge land in the same subgraph
+    assert all(len(v) == 1 for v in groups.values())
+    spoke = {frozenset(p) for p in [(0, 3), (0, 4), (0, 5)]}
+    tri = {frozenset(p) for p in [(0, 1), (0, 2), (1, 2)]}
+    lab = {next(iter(groups[k])) for k in spoke}
+    lab2 = {next(iter(groups[k])) for k in tri}
+    assert len(lab) == 1 and len(lab2) == 1 and lab != lab2
+
+
+def test_ebg_alpha_beta_sensitivity(tiny_powerlaw):
+    """Large alpha/beta should tighten balance at the cost of replication."""
+    loose = partition_metrics(tiny_powerlaw, ebg_partition(tiny_powerlaw, 8, alpha=0.1, beta=0.1))
+    tight = partition_metrics(tiny_powerlaw, ebg_partition(tiny_powerlaw, 8, alpha=10.0, beta=10.0))
+    assert tight.edge_imbalance <= loose.edge_imbalance + 1e-9
+    assert tight.replication_factor >= loose.replication_factor - 1e-9
+
+
+def test_paper_qualitative_claims(tiny_powerlaw):
+    """Table III pattern: EBG < min(DBH, CVC) on replication; NE edge-balanced
+    but vertex-imbalanced; hash worst replication."""
+    p = 8
+    ebg = partition_metrics(tiny_powerlaw, ebg_partition(tiny_powerlaw, p))
+    dbh = partition_metrics(tiny_powerlaw, dbh_partition(tiny_powerlaw, p))
+    cvc = partition_metrics(tiny_powerlaw, cvc_partition(tiny_powerlaw, p))
+    ne = partition_metrics(tiny_powerlaw, ne_partition(tiny_powerlaw, p))
+    hsh = partition_metrics(tiny_powerlaw, random_hash_partition(tiny_powerlaw, p))
+    assert ebg.replication_factor < min(dbh.replication_factor, cvc.replication_factor)
+    assert ebg.edge_imbalance < 1.15 and ebg.vertex_imbalance < 1.15
+    assert ne.edge_imbalance < 1.05
+    assert ne.vertex_imbalance > ebg.vertex_imbalance
+    assert hsh.replication_factor > ebg.replication_factor
+
+
+def test_metis_like_on_road_vs_powerlaw(tiny_road, tiny_powerlaw):
+    """The paper's METIS pathology: fine on road-like graphs, edge-imbalanced
+    on power-law graphs."""
+    road = partition_metrics(tiny_road, metis_like_partition(tiny_road, 8))
+    pl = partition_metrics(tiny_powerlaw, metis_like_partition(tiny_powerlaw, 8))
+    assert road.replication_factor < 1.6
+    assert pl.edge_imbalance > road.edge_imbalance

@@ -1,0 +1,71 @@
+"""Hypothesis property tests: system invariants + the paper's Theorems 1/2."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ebg_partition_np,
+    partition_metrics,
+    theorem1_edge_bound,
+    theorem2_vertex_bound,
+)
+from repro.core.types import Graph
+
+
+@st.composite
+def graphs(draw):
+    V = draw(st.integers(4, 40))
+    E = draw(st.integers(4, 120))
+    src = draw(st.lists(st.integers(0, V - 1), min_size=E, max_size=E))
+    dst = draw(st.lists(st.integers(0, V - 1), min_size=E, max_size=E))
+    pairs = [(u, v) for u, v in zip(src, dst) if u != v]
+    if not pairs:
+        pairs = [(0, 1)]
+    return Graph(
+        src=np.array([u for u, _ in pairs], np.int32),
+        dst=np.array([v for _, v in pairs], np.int32),
+        num_vertices=V,
+    )
+
+
+@settings(max_examples=60, deadline=None)
+@given(graphs(), st.integers(2, 6), st.floats(0.25, 4.0), st.floats(0.25, 4.0))
+def test_theorem_bounds_hold(g, p, alpha, beta):
+    """Theorem 1/2 worst-case imbalance bounds hold for every EBG run."""
+    res = ebg_partition_np(g, p, alpha=alpha, beta=beta)
+    m = partition_metrics(g, res)
+    E = g.num_edges
+    b1 = theorem1_edge_bound(E, p, alpha, beta)
+    assert m.edge_imbalance <= b1 + 1e-9
+    sum_vi = int(m.vertices_per_part.sum())
+    b2 = theorem2_vertex_bound(sum_vi, g.num_vertices, p, alpha, beta)
+    assert m.vertex_imbalance <= b2 + 1e-9
+
+
+@settings(max_examples=40, deadline=None)
+@given(graphs(), st.integers(2, 6))
+def test_partition_invariants(g, p):
+    res = ebg_partition_np(g, p)
+    m = partition_metrics(g, res)
+    # every edge assigned once
+    assert res.part_in_input_order().shape[0] == g.num_edges
+    # replication factor ≥ 1, subgraph vertex sets cover all endpoints
+    assert m.replication_factor >= 1.0 - 1e-9
+    assert m.edges_per_part.sum() == g.num_edges
+    covered = np.unique(np.concatenate([np.asarray(g.src), np.asarray(g.dst)]))
+    assert m.vertices_per_part.sum() >= covered.shape[0]
+
+
+@settings(max_examples=20, deadline=None)
+@given(graphs(), st.integers(2, 4))
+def test_engine_cc_matches_reference(g, p):
+    """BSP CC on any partition == host label propagation."""
+    from repro.graph import algorithms as alg
+    from repro.graph.build import build_subgraphs
+
+    res = ebg_partition_np(g, p)
+    sub = build_subgraphs(g, res, symmetrize=True)
+    labels, _ = alg.connected_components(sub, max_supersteps=100)
+    glob = alg.scatter_to_global(sub, labels, g.num_vertices)
+    ref = alg.cc_reference(g)
+    covered = np.unique(np.concatenate([np.asarray(g.src), np.asarray(g.dst)]))
+    np.testing.assert_array_equal(glob[covered], ref[covered])
