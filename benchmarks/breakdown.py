@@ -4,6 +4,10 @@ Real per-worker wall-clock: each worker's local fixpoint runs as its OWN
 jit call, timed separately per superstep (p=4, as in the paper). comm is
 modeled from measured message counts; ΔC^k = max_i - min_i of the measured
 per-worker superstep time; ΔC = Σ_k ΔC^k.
+
+Partition → build goes through `GraphPipeline`; the per-superstep loop
+below is the instrumented engine itself (it times workers individually,
+which the batched `run` facade deliberately does not).
 """
 from __future__ import annotations
 
@@ -13,9 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import load_graph
-from repro.core import PARTITIONERS
-from repro.graph.build import build_subgraphs
+from benchmarks.common import PARTS, load_graph
+from repro.api import GraphPipeline
 from repro.graph.engine import CC, _jit_min_superstep_sim, init_cc
 
 T_MSG = 2.0e-7
@@ -26,8 +29,8 @@ def tree_slice(sub, i: int):
     return jax.tree.map(lambda a: a[i : i + 1], sub)
 
 
-def per_worker_breakdown(g, res, max_supersteps=100):
-    sub = build_subgraphs(g, res, symmetrize=True)
+def per_worker_breakdown(pipe: GraphPipeline, max_supersteps=100):
+    sub = pipe.build(symmetrize=True).subgraphs
     p = sub.num_parts
     # per-worker single-subgraph views (batch dim of 1) — timed separately
     subs = [tree_slice(sub, i) for i in range(p)]
@@ -78,14 +81,15 @@ def per_worker_breakdown(g, res, max_supersteps=100):
     )
 
 
-def main(scale: float = 1.0, partitioners=("ebg", "dbh", "cvc", "ne", "metis")):
+def main(scale: float = 1.0, partitioners=None):
+    partitioners = PARTS if partitioners is None else partitioners
     g, _ = load_graph("livejournal_like", scale)
+    base = GraphPipeline(g)
     print("\n== Table II: breakdown of CC with 4 workers (seconds) ==")
     print(f"{'':7} {'comp':>8} {'comm':>8} {'ΔC':>8} {'exec':>8} {'steps':>6}")
     out = {}
     for name in partitioners:
-        res = PARTITIONERS[name](g, 4)
-        row = per_worker_breakdown(g, res)
+        row = per_worker_breakdown(base.partition(name, parts=4))
         out[name] = row
         print(f"{name:7} {row['comp']:>8.3f} {row['comm']:>8.4f} "
               f"{row['delta_c']:>8.3f} {row['exec_time']:>8.3f} {row['supersteps']:>6}")

@@ -1,11 +1,16 @@
-"""Shared benchmark plumbing: graph set, partitioner registry, CSV output."""
+"""Shared benchmark plumbing: graph set, pipeline cache, CSV output.
+
+All sections drive `repro.api.GraphPipeline`; the partitioner list is
+derived from the registry (capability flag `benchmark_default`), not
+hand-maintained.
+"""
 from __future__ import annotations
 
 import time
 
 import numpy as np
 
-from repro.core import PARTITIONERS
+from repro.api import GraphPipeline, benchmark_partitioners
 from repro.graph.generate import make_graph
 
 # Benchmark-scale analogues of the paper's datasets (Table I mapping in
@@ -16,11 +21,11 @@ GRAPHS = {
     "road_like": dict(name="road_like", workers=12),
 }
 
-PARTS = ["ebg", "dbh", "cvc", "ne", "metis"]
+PARTS = list(benchmark_partitioners())
 
 
 _GRAPH_CACHE: dict = {}
-_PART_CACHE: dict = {}
+_PIPE_CACHE: dict = {}
 
 
 def load_graph(key: str, scale: float = 1.0):
@@ -45,13 +50,24 @@ def load_graph(key: str, scale: float = 1.0):
     return g, spec["workers"]
 
 
-def get_partition(key: str, scale: float, name: str, p: int):
-    """Partition results cached across benchmark modules."""
+def get_pipeline(key: str, scale: float, name: str, p: int) -> GraphPipeline:
+    """One pipeline per (graph, partitioner, parts), cached across benchmark
+    modules — partition results, builds, and metrics are all reused."""
     ck = (key, scale, name, p)
-    if ck not in _PART_CACHE:
+    if ck not in _PIPE_CACHE:
         g, _ = load_graph(key, scale)
-        _PART_CACHE[ck] = PARTITIONERS[name](g, p)
-    return _PART_CACHE[ck]
+        _PIPE_CACHE[ck] = GraphPipeline(g).partition(name, parts=p)
+    return _PIPE_CACHE[ck]
+
+
+def release_builds(key: str | None = None, scale: float | None = None):
+    """Drop cached SubgraphSets (partitions/metrics stay cached), optionally
+    only for one (graph, scale). Sections call this after finishing a
+    graph's row so peak RSS is one row's builds, not the whole suite's —
+    builds are cheap to redo relative to partitioning."""
+    for (k, s, _, _), pipe in _PIPE_CACHE.items():
+        if (key is None or k == key) and (scale is None or s == scale):
+            pipe.clear_builds()
 
 
 def timed(fn, *args, **kw):

@@ -1,14 +1,13 @@
 """Paper Tables IV & V: total BSP messages and max/mean message balance
 for CC across partitioners, plus the replication-factor correlation.
+
+Each cell is one `GraphPipeline.run` — the pipeline picks the build the
+program needs (CC symmetrizes) and the SSSP source (highest-degree
+covered vertex), and caches partition/build/metrics across sections.
 """
 from __future__ import annotations
 
-import numpy as np
-
-from benchmarks.common import GRAPHS, PARTS, get_partition, load_graph
-from repro.core import PARTITIONERS, partition_metrics
-from repro.graph import algorithms as alg
-from repro.graph.build import build_subgraphs
+from benchmarks.common import GRAPHS, PARTS, get_pipeline, load_graph, release_builds
 
 
 def run(scale: float = 1.0, partitioners=PARTS, algo: str = "cc"):
@@ -18,26 +17,19 @@ def run(scale: float = 1.0, partitioners=PARTS, algo: str = "cc"):
         g, p = load_graph(key, scale)
         row = {}
         for name in partitioners:
-            res = get_partition(key, scale, name, p)
-            m = partition_metrics(g, res)
-            sub = build_subgraphs(g, res, symmetrize=(algo == "cc"))
-            if algo == "cc":
-                _, stats = alg.connected_components(sub)
-            elif algo == "pr":
-                _, stats = alg.pagerank(sub, g.num_vertices, num_iters=10)
-            else:
-                cov = np.unique(np.concatenate([np.asarray(g.src), np.asarray(g.dst)]))
-                src_v = int(cov[np.argmax(g.degrees()[cov])])
-                _, stats = alg.sssp(sub, src_v)
+            pipe = get_pipeline(key, scale, name, p)
+            r = pipe.run(algo, num_iters=10) if algo == "pr" else pipe.run(algo)
+            m = pipe.metrics
             row[name] = dict(
-                total_messages=stats.total_messages,
-                max_mean=round(stats.max_mean, 3),
+                total_messages=r.stats.total_messages,
+                max_mean=round(r.stats.max_mean, 3),
                 replication_factor=round(m.replication_factor, 2),
                 edge_imbalance=round(m.edge_imbalance, 2),
                 vertex_imbalance=round(m.vertex_imbalance, 2),
-                supersteps=stats.supersteps,
+                supersteps=r.stats.supersteps,
             )
         out[key] = row
+        release_builds(key, scale)
         cells = "  ".join(
             f"{n}:{row[n]['total_messages']:.2e}|{row[n]['max_mean']:.2f}"
             for n in partitioners
@@ -50,9 +42,13 @@ def validate_claims(results):
     """Paper §V headline numbers (trend validation on synthetic graphs)."""
     print("\n== Claim validation (power-law graphs) ==")
     ok = True
+    compared = 0
     for key, row in results.items():
         if key == "road_like":
             continue
+        if not all(n in row for n in ("ebg", "dbh", "cvc")):
+            continue  # partial --partitioners selection: nothing to compare
+        compared += 1
         ebg, dbh, cvc = row["ebg"], row["dbh"], row["cvc"]
         msg_red = 1 - ebg["total_messages"] / min(dbh["total_messages"], cvc["total_messages"])
         rep_red = 1 - ebg["replication_factor"] / min(dbh["replication_factor"], cvc["replication_factor"])
@@ -65,12 +61,15 @@ def validate_claims(results):
               + (f", NE max/mean = {ne_mm}" if ne_mm else "")
               + (f", METIS max/mean = {metis_mm}" if metis_mm else ""))
         ok &= msg_red > 0 and rep_red > 0 and balanced
+    if not compared:
+        print("claims (directional): skipped (partial --partitioners selection)")
+        return None
     print("claims (directional):", "PASS" if ok else "FAIL")
     return ok
 
 
-def main(scale: float = 1.0):
-    res = run(scale)
+def main(scale: float = 1.0, partitioners=PARTS):
+    res = run(scale, partitioners=partitioners)
     validate_claims(res)
     return res
 

@@ -16,33 +16,45 @@ def main(argv=None) -> None:
                     help="graph size multiplier vs DESIGN.md defaults")
     ap.add_argument("--quick", action="store_true", help="partition metrics only")
     ap.add_argument("--skip-roofline", action="store_true")
+    # Names are validated against the repro.api registry after parsing, so
+    # `--help` / usage errors stay import-cheap (no jax load).
+    ap.add_argument("--partitioners", nargs="+", metavar="NAME", default=None,
+                    help="registry subset (default: every benchmark_default partitioner)")
     args = ap.parse_args(argv)
+
+    from repro.api import benchmark_partitioners, partitioner_names
+
+    known = partitioner_names()
+    parts = list(benchmark_partitioners()) if args.partitioners is None else args.partitioners
+    unknown = [n for n in parts if n not in known]
+    if unknown:
+        ap.error(f"unknown partitioner(s) {unknown}; registered: {list(known)}")
 
     from benchmarks import breakdown, messages, partition_tables, runtime, roofline
 
     csv: list[tuple[str, float, str]] = []
 
     t0 = time.time()
-    res3 = partition_tables.main(args.scale)
+    res3 = partition_tables.main(args.scale, partitioners=parts)
     csv.append(("table1_table3_partition_metrics", (time.time() - t0) * 1e6,
-                f"ebg_rep={res3['livejournal_like']['ebg']['replication_factor']}"))
+                f"ebg_rep={res3['livejournal_like'].get('ebg', {}).get('replication_factor', 'n/a')}"))
 
     if not args.quick:
         t0 = time.time()
-        res45 = messages.main(args.scale)
-        ebg = res45["livejournal_like"]["ebg"]
+        res45 = messages.main(args.scale, partitioners=parts)
+        ebg = res45["livejournal_like"].get("ebg", {})
         csv.append(("table4_table5_messages", (time.time() - t0) * 1e6,
-                    f"ebg_msgs={ebg['total_messages']};maxmean={ebg['max_mean']}"))
+                    f"ebg_msgs={ebg.get('total_messages', 'n/a')};maxmean={ebg.get('max_mean', 'n/a')}"))
 
         t0 = time.time()
-        resrt = runtime.main(args.scale)
-        best = resrt[("livejournal_like", "cc")]["ebg"]["sim_runtime_s"]
+        resrt = runtime.main(args.scale, partitioners=parts)
+        best = resrt[("livejournal_like", "cc")].get("ebg", {}).get("sim_runtime_s", "n/a")
         csv.append(("fig3_fig4_runtime", (time.time() - t0) * 1e6, f"ebg_cc={best}s"))
 
         t0 = time.time()
-        res2 = breakdown.main(min(args.scale, 0.25))
+        res2 = breakdown.main(min(args.scale, 0.25), partitioners=parts)
         csv.append(("table2_fig5_breakdown", (time.time() - t0) * 1e6,
-                    f"ebg_exec={res2['ebg']['exec_time']:.3f}s"))
+                    f"ebg_exec={res2.get('ebg', {}).get('exec_time', float('nan')):.3f}s"))
 
     if not args.skip_roofline:
         try:

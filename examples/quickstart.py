@@ -1,31 +1,44 @@
-"""Quickstart: EBG-partition a power-law graph, run subgraph-centric CC,
-and compare the communication profile against DBH.
+"""Quickstart for the `repro.api` facade.
+
+One `GraphPipeline` session owns the whole subgraph-centric lifecycle:
+
+    pipeline = GraphPipeline(graph)                # bind a graph
+    view = pipeline.partition("ebg", parts=8)      # pick a registered partitioner
+    run = view.run("cc")                           # build + BSP engine + stats
+
+Stages are lazy and cached per partition view — `view.metrics`,
+`view.result`, and repeated `run` calls never recompute a stage. The
+partitioner names ("ebg", "dbh", ...) come from the `repro.api`
+registry; per-algorithm knobs are frozen config dataclasses
+(`EBGConfig(alpha, beta, ...)`, `HashConfig(seed)`, ...), passed either
+as `config=` or as keyword overrides:
+
+    pipeline.partition("ebg", parts=8, alpha=2.0).run("sssp")
+
+Here we EBG-partition a power-law graph, run subgraph-centric connected
+components, and compare the communication profile against DBH, as in
+paper §V:
 
   PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
-
-from repro.core import dbh_partition, ebg_partition, partition_metrics
-from repro.graph import algorithms as alg
-from repro.graph.build import build_subgraphs
+from repro.api import GraphPipeline, list_partitioners
 from repro.graph.generate import make_graph
 
 
 def main():
     g = make_graph("tiny_powerlaw")
     print(f"graph: |V|={g.num_vertices} |E|={g.num_edges}")
+    print("registered partitioners:", ", ".join(s.name for s in list_partitioners()))
 
-    for name, partitioner in [("EBG", ebg_partition), ("DBH", dbh_partition)]:
-        res = partitioner(g, 8)
-        m = partition_metrics(g, res)
-        sub = build_subgraphs(g, res, symmetrize=True)
-        labels, stats = alg.connected_components(sub)
-        ncc = np.unique(alg.scatter_to_global(sub, labels, g.num_vertices)).shape[0]
+    pipeline = GraphPipeline(g)
+    for name in ("ebg", "dbh"):
+        run = pipeline.partition(name, parts=8).run("cc")
+        m = run.metrics
         print(
-            f"{name}: replication={m.replication_factor:.2f} "
+            f"{name.upper()}: replication={m.replication_factor:.2f} "
             f"edge_imb={m.edge_imbalance:.2f} vertex_imb={m.vertex_imbalance:.2f} | "
-            f"CC supersteps={stats.supersteps} messages={stats.total_messages} "
-            f"max/mean={stats.max_mean:.3f}"
+            f"CC components={run.num_components()} supersteps={run.stats.supersteps} "
+            f"messages={run.stats.total_messages} max/mean={run.stats.max_mean:.3f}"
         )
     print("EBG cuts fewer vertices -> fewer messages, same balance. (paper §V)")
 

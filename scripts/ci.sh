@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Tier-1 verification: the repo's canonical test command.
+#
+#   scripts/ci.sh            # full tier-1 run
+#   scripts/ci.sh -k api     # extra pytest args pass through
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

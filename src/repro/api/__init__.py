@@ -1,0 +1,66 @@
+"""repro.api — the stable seam every scaling PR builds on.
+
+Two pieces (see docs/api.md):
+
+  * a decorator-based partitioner registry with per-algorithm frozen
+    configs and capability flags (`register_partitioner`,
+    `get_partitioner`, `list_partitioners`), and
+  * the `GraphPipeline` facade owning the partition → SubgraphSet →
+    engine → stats/metrics lifecycle with lazy, cached stages.
+
+`GraphPipeline` (and friends) are imported lazily: `repro.core` modules
+import the registry at definition time to self-register, and the
+pipeline imports `repro.core` — the lazy hop breaks that cycle.
+"""
+from repro.api.config import (
+    EBGConfig,
+    EBVConfig,
+    HashConfig,
+    MetisLikeConfig,
+    NEConfig,
+    PartitionerConfig,
+)
+from repro.api.registry import (
+    Partitioner,
+    PartitionerSpec,
+    RegistryFunctionView,
+    benchmark_partitioners,
+    get_partitioner,
+    list_partitioners,
+    partitioner_names,
+    register_partitioner,
+)
+
+_LAZY = ("GraphPipeline", "PipelineRun", "SubgraphSpec", "LoweredBSP")
+
+__all__ = [
+    "EBGConfig",
+    "EBVConfig",
+    "HashConfig",
+    "MetisLikeConfig",
+    "NEConfig",
+    "PartitionerConfig",
+    "Partitioner",
+    "PartitionerSpec",
+    "RegistryFunctionView",
+    "benchmark_partitioners",
+    "get_partitioner",
+    "list_partitioners",
+    "partitioner_names",
+    "register_partitioner",
+    *_LAZY,
+]
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        from repro.api import pipeline as _pipeline
+
+        val = getattr(_pipeline, name)
+        globals()[name] = val  # cache for subsequent lookups
+        return val
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(__all__)

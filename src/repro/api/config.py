@@ -1,0 +1,117 @@
+"""Frozen per-algorithm partitioner configs for the `repro.api` registry.
+
+Each config is an immutable dataclass validated at construction time
+(`ValueError` on bad values). `PartitionerSpec.partition` maps a config
+onto the underlying algorithm's keyword arguments, dropping fields the
+algorithm does not accept — e.g. `block` is consumed only by the chunked
+EBG variant, so `EBGConfig` can be shared by both EBG entry points.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+def _require(cond: bool, msg: str) -> None:
+    if not cond:
+        raise ValueError(msg)
+
+
+def _validate_seed(seed) -> None:
+    _require(
+        isinstance(seed, int) and not isinstance(seed, bool) and seed >= 0,
+        f"seed must be a non-negative int, got {seed!r}",
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionerConfig:
+    """Base config. Subclasses override `validate` to raise ValueError."""
+
+    def __post_init__(self) -> None:
+        self.validate()
+
+    def validate(self) -> None:  # pragma: no cover - overridden
+        pass
+
+    def replace(self, **changes) -> "PartitionerConfig":
+        """Validated functional update (dataclasses.replace re-validates)."""
+        return dataclasses.replace(self, **changes)
+
+    def to_kwargs(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class EBGConfig(PartitionerConfig):
+    """EBG knobs (paper Algorithm 1; the paper names the algorithm EBV).
+
+    alpha/beta weight the edge/vertex balance terms of the evaluation
+    function; `block` sizes the chunked variant's vectorized score block
+    (ignored by the unblocked scan); `sort_edges` toggles the §IV-C
+    degree-sum edge ordering.
+    """
+
+    alpha: float = 1.0
+    beta: float = 1.0
+    block: int = 256
+    sort_edges: bool = True
+
+    def validate(self) -> None:
+        _require(
+            isinstance(self.alpha, (int, float)) and math.isfinite(self.alpha) and self.alpha > 0,
+            f"alpha must be finite and > 0, got {self.alpha!r}",
+        )
+        _require(
+            isinstance(self.beta, (int, float)) and math.isfinite(self.beta) and self.beta > 0,
+            f"beta must be finite and > 0, got {self.beta!r}",
+        )
+        _require(
+            isinstance(self.block, int) and not isinstance(self.block, bool) and self.block >= 1,
+            f"block must be a positive int, got {self.block!r}",
+        )
+        _require(isinstance(self.sort_edges, bool), f"sort_edges must be a bool, got {self.sort_edges!r}")
+
+
+# The paper calls the algorithm EBV; the repo's modules call it EBG.
+EBVConfig = EBGConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class HashConfig(PartitionerConfig):
+    """Hash-family baselines (random edge hash, DBH, CVC)."""
+
+    seed: int = 0
+
+    def validate(self) -> None:
+        _validate_seed(self.seed)
+
+
+@dataclasses.dataclass(frozen=True)
+class NEConfig(PartitionerConfig):
+    """Neighbor Expansion [Zhang et al., KDD'17]."""
+
+    seed: int = 0
+
+    def validate(self) -> None:
+        _validate_seed(self.seed)
+
+
+@dataclasses.dataclass(frozen=True)
+class MetisLikeConfig(PartitionerConfig):
+    """Multilevel METIS-style stand-in."""
+
+    seed: int = 0
+    coarsen_to: int = 4096
+    refine_passes: int = 6
+
+    def validate(self) -> None:
+        _validate_seed(self.seed)
+        _require(
+            isinstance(self.coarsen_to, int) and self.coarsen_to >= 2,
+            f"coarsen_to must be an int >= 2, got {self.coarsen_to!r}",
+        )
+        _require(
+            isinstance(self.refine_passes, int) and self.refine_passes >= 0,
+            f"refine_passes must be a non-negative int, got {self.refine_passes!r}",
+        )

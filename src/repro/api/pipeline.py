@@ -1,0 +1,445 @@
+"""`GraphPipeline` — the end-to-end facade over the paper's stack.
+
+    run = GraphPipeline(graph).partition("ebg", parts=8).build(symmetrize=True).run("cc")
+    run.stats.total_messages, run.metrics.replication_factor, run.to_global()
+
+Stages are lazy and cached on a shared partition-stage state, so fluent
+views are cheap: `.partition(...)` starts a fresh stage; `.build(...)`
+and repeated `.run(...)` calls on the same stage reuse the cached
+`PartitionResult`, `PartitionMetrics`, and per-(symmetrize, pad) built
+`SubgraphSet`s. If `.build` is never called, `.run` picks the build the
+program needs (CC symmetrizes; SSSP/PageRank keep edge direction).
+
+Distributed execution shares the same facade: `GraphPipeline.from_spec`
+makes an abstract (shape-only) pipeline, and `.lower(mesh=...)` AOT-lowers
+the shard_map'd BSP stepper for either an abstract spec or a concretely
+built subgraph set — this is what the production dry-run drives.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+import weakref
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.api.config import PartitionerConfig
+from repro.api.registry import PartitionerSpec, check_num_parts, get_partitioner
+from repro.core.metrics import PartitionMetrics, partition_metrics
+from repro.core.types import Graph, PartitionResult
+from repro.graph import algorithms as alg
+from repro.graph.build import SubgraphSet, build_subgraphs
+from repro.graph.engine import (
+    CC,
+    SSSP,
+    BSPStats,
+    MinProgram,
+    init_cc,
+    init_sssp,
+    make_distributed_stepper,
+    subgraphs_to_arrays,
+)
+
+ProgramLike = Union[str, MinProgram]
+
+
+def _resolve_program(program: ProgramLike) -> tuple[str, Optional[MinProgram]]:
+    """Normalize a program handle to (name, MinProgram-or-None-for-PR)."""
+    if isinstance(program, MinProgram):
+        # The facade owns init-value semantics, which only exist for the
+        # paper's programs — a custom MinProgram would silently run with
+        # the wrong init, so reject anything that isn't stock CC/SSSP.
+        if program == CC or program == SSSP:
+            return program.name, program
+        raise ValueError(
+            f"unsupported MinProgram {program.name!r}: GraphPipeline.run knows init "
+            "values for CC/SSSP/PR only — drive custom programs through "
+            "repro.graph.engine.run_min_bsp / make_distributed_stepper directly"
+        )
+    key = str(program).lower()
+    if key in ("cc", "components", "connected_components"):
+        return "cc", CC
+    if key == "sssp":
+        return "sssp", SSSP
+    if key in ("pr", "pagerank"):
+        return "pr", None
+    raise ValueError(f"unknown program {program!r}; expected cc | sssp | pr")
+
+
+def _default_symmetrize(name: str, prog: Optional[MinProgram]) -> bool:
+    # CC treats the graph as undirected; SSSP/PageRank keep direction.
+    return bool(prog.bidirectional) if prog is not None else False
+
+
+def _normalize_axes(mesh, axes) -> tuple:
+    if axes is None:
+        return tuple(mesh.axis_names)
+    return (axes,) if isinstance(axes, str) else tuple(axes)
+
+
+# SSSP default source depends only on the graph, not the partition — cache
+# per graph object so a suite running 5 partitioners over one graph scans
+# the edge list once. Keyed by id() with a liveness check (Graph holds jax
+# arrays, so it is not hashable).
+_SOURCE_CACHE: dict[int, tuple] = {}
+
+
+def _default_source_for(graph: Graph) -> int:
+    key = id(graph)
+    ent = _SOURCE_CACHE.get(key)
+    if ent is not None and ent[0]() is graph:
+        return ent[1]
+    cov = graph.covered_vertices()
+    src_v = int(cov[np.argmax(graph.degrees()[cov])])
+    _SOURCE_CACHE[key] = (weakref.ref(graph, lambda _: _SOURCE_CACHE.pop(key, None)), src_v)
+    return src_v
+
+
+# --------------------------------------------------------------- dry-run spec
+
+
+@dataclasses.dataclass(frozen=True)
+class SubgraphSpec:
+    """Shape-only description of a padded SubgraphSet (for AOT lowering)."""
+
+    num_parts: int
+    max_v: int
+    max_e: int
+    max_msg: int = 2048
+
+    @classmethod
+    def of(cls, sub: SubgraphSet) -> "SubgraphSpec":
+        return cls(sub.num_parts, sub.max_v, sub.max_e, sub.max_msg)
+
+    def array_specs(self) -> tuple[dict, dict]:
+        """ShapeDtypeStructs + statics matching `subgraphs_to_arrays`."""
+        f32, i32, b = jnp.float32, jnp.int32, jnp.bool_
+        p = self.num_parts
+        e2 = lambda dt: jax.ShapeDtypeStruct((p, self.max_e), dt)
+        v2 = lambda dt: jax.ShapeDtypeStruct((p, self.max_v), dt)
+        m3 = lambda dt: jax.ShapeDtypeStruct((p, p, self.max_msg), dt)
+        arrays = dict(
+            lsrc=e2(i32), ldst=e2(i32), weight=e2(f32), edge_mask=e2(b),
+            lsrc_s=e2(i32), ldst_s=e2(i32), weight_s=e2(f32), edge_mask_s=e2(b),
+            gid=v2(i32), vmask=v2(b), is_master=v2(b), out_degree=v2(f32),
+            send_idx=m3(i32), recv_idx=m3(i32), msg_mask=m3(b), recv_mask=m3(b),
+        )
+        statics = dict(num_parts=p, max_v=self.max_v, max_e=self.max_e, max_msg=self.max_msg)
+        return arrays, statics
+
+    def value_spec(self, prog: MinProgram) -> jax.ShapeDtypeStruct:
+        dt = jnp.int32 if prog.dtype == "int32" else jnp.float32
+        return jax.ShapeDtypeStruct((self.num_parts, self.max_v + 1), dt)
+
+
+@dataclasses.dataclass
+class LoweredBSP:
+    """AOT-lowered shard_map'd BSP stepper + its shardings."""
+
+    spec: SubgraphSpec
+    program: str
+    mesh: object
+    axes: tuple
+    lowered: object
+    compiled: object
+    compile_s: float
+    in_shardings: tuple
+
+
+# ------------------------------------------------------------------ pipeline
+
+
+class GraphPipeline:
+    """Fluent partition → build → engine → metrics session (see module doc)."""
+
+    def __init__(self, graph: Optional[Graph], *, weights: Optional[np.ndarray] = None):
+        self.graph = graph
+        self._weights = weights
+        self._spec: Optional[SubgraphSpec] = None
+        self._state: Optional[dict] = None  # partition-stage caches, shared by views
+        self._build_params: Optional[dict] = None
+
+    @classmethod
+    def from_spec(cls, spec: SubgraphSpec) -> "GraphPipeline":
+        """Abstract pipeline (shapes only) — supports `.lower` but not `.run`."""
+        pipe = cls(None)
+        pipe._spec = spec
+        return pipe
+
+    def _clone(self, *, state=None, build_params=None) -> "GraphPipeline":
+        pipe = GraphPipeline(self.graph, weights=self._weights)
+        pipe._spec = self._spec
+        pipe._state = self._state if state is None else state
+        pipe._build_params = self._build_params if build_params is None else build_params
+        return pipe
+
+    # ----------------------------------------------------------- partition
+
+    def partition(
+        self,
+        partitioner: Union[str, PartitionerSpec] = "ebg",
+        parts: int = 8,
+        *,
+        config: Optional[PartitionerConfig] = None,
+        **overrides,
+    ) -> "GraphPipeline":
+        """Select a registered partitioner; returns a new pipeline view whose
+        downstream stages are computed lazily and cached."""
+        if self.graph is None:
+            raise RuntimeError("abstract (from_spec) pipelines cannot partition a graph")
+        spec = partitioner if isinstance(partitioner, PartitionerSpec) else get_partitioner(partitioner)
+        check_num_parts(parts)  # fail fast here; spec.partition re-checks on the lazy path
+        cfg = spec.make_config(config, **overrides)
+        spec.check_overrides(overrides)
+        state = dict(spec=spec, config=cfg, parts=parts, result=None, metrics=None, builds={})
+        return self._clone(state=state, build_params={})
+
+    def _stage(self) -> dict:
+        if self._state is None:
+            raise RuntimeError("no partition stage: call .partition(name, parts=...) first")
+        return self._state
+
+    @property
+    def partitioner(self) -> PartitionerSpec:
+        return self._stage()["spec"]
+
+    @property
+    def config(self) -> PartitionerConfig:
+        return self._stage()["config"]
+
+    @property
+    def num_parts(self) -> int:
+        return self._stage()["parts"]
+
+    @property
+    def result(self) -> PartitionResult:
+        st = self._stage()
+        if st["result"] is None:
+            st["result"] = st["spec"].partition(self.graph, st["parts"], config=st["config"])
+        return st["result"]
+
+    @property
+    def metrics(self) -> PartitionMetrics:
+        st = self._stage()
+        if st["metrics"] is None:
+            st["metrics"] = partition_metrics(self.graph, self.result)
+        return st["metrics"]
+
+    # --------------------------------------------------------------- build
+
+    def build(self, *, symmetrize: bool = False, pad_multiple: int = 8) -> "GraphPipeline":
+        """Pin build parameters for subsequent `.run`/`.subgraphs` access."""
+        self._stage()
+        return self._clone(build_params=dict(symmetrize=symmetrize, pad_multiple=pad_multiple))
+
+    def subgraphs_for(self, *, symmetrize: bool, pad_multiple: int = 8) -> SubgraphSet:
+        st = self._stage()
+        key = (bool(symmetrize), int(pad_multiple))
+        if key not in st["builds"]:
+            st["builds"][key] = build_subgraphs(
+                self.graph,
+                self.result,
+                weights=self._weights,
+                symmetrize=symmetrize,
+                pad_multiple=pad_multiple,
+            )
+        return st["builds"][key]
+
+    @property
+    def subgraphs(self) -> SubgraphSet:
+        bp = self._build_params or {}
+        return self.subgraphs_for(
+            symmetrize=bp.get("symmetrize", False), pad_multiple=bp.get("pad_multiple", 8)
+        )
+
+    # ----------------------------------------------------------------- run
+
+    def default_source(self) -> int:
+        """SSSP source: highest-degree covered vertex (benchmark convention)."""
+        return _default_source_for(self.graph)
+
+    def _build_params_for(self, name: str, prog: Optional[MinProgram], symmetrize, pad_multiple) -> dict:
+        # Explicit per-call arguments (not None) win over params pinned by
+        # `.build`, which win over program defaults.
+        bp = dict(self._build_params or {})
+        if symmetrize is not None:
+            bp["symmetrize"] = symmetrize
+        if pad_multiple is not None:
+            bp["pad_multiple"] = pad_multiple
+        bp.setdefault("symmetrize", _default_symmetrize(name, prog))
+        bp.setdefault("pad_multiple", 8)
+        return bp
+
+    def clear_builds(self) -> None:
+        """Drop cached SubgraphSets (the partition result and metrics stay).
+        Long-lived pipelines over several graphs can reclaim the padded
+        build tensors once a benchmark section is done with them."""
+        if self._state is not None:
+            self._state["builds"].clear()
+
+    def prepare(self, program: ProgramLike = "cc", *, symmetrize=None, pad_multiple: Optional[int] = None) -> "GraphPipeline":
+        """Force partition + build (+ SSSP source) caches, so a subsequent
+        `.run` timing measures only the engine."""
+        name, prog = _resolve_program(program)
+        bp = self._build_params_for(name, prog, symmetrize, pad_multiple)
+        self.subgraphs_for(**bp)
+        if name == "sssp":
+            self.default_source()
+        return self
+
+    def run(
+        self,
+        program: ProgramLike = "cc",
+        *,
+        mode: str = "sim",
+        symmetrize: Optional[bool] = None,
+        pad_multiple: Optional[int] = None,
+        source: Optional[int] = None,
+        **kw,
+    ) -> "PipelineRun":
+        """Execute `program` over the partitioned graph and collect stats.
+
+        mode="sim" batches all workers on one device (tests/benchmarks);
+        mode="dist" shard_maps one subgraph per device (pass mesh=...).
+        Extra kwargs flow to the engine (max_supersteps, inner_cap,
+        exchange_period, num_iters, ...).
+        """
+        name, prog = _resolve_program(program)
+        sub = self.subgraphs_for(**self._build_params_for(name, prog, symmetrize, pad_multiple))
+        if mode == "sim":
+            if name == "pr":
+                values, stats = alg.pagerank(sub, self.graph.num_vertices, **kw)
+            elif name == "sssp":
+                src_v = self.default_source() if source is None else int(source)
+                values, stats = alg.sssp(sub, src_v, **kw)
+            else:
+                values, stats = alg.connected_components(sub, **kw)
+        elif mode == "dist":
+            values, stats = self._run_distributed(name, prog, sub, source=source, **kw)
+        else:
+            raise ValueError(f"unknown mode {mode!r}; expected 'sim' or 'dist'")
+        return PipelineRun(pipeline=self, program=name, values=values, stats=stats, subgraphs=sub)
+
+    def _run_distributed(
+        self,
+        name: str,
+        prog: Optional[MinProgram],
+        sub: SubgraphSet,
+        *,
+        mesh,
+        axes=None,
+        num_supersteps: int = 30,
+        inner_cap: int = 10_000,
+        source: Optional[int] = None,
+    ) -> tuple[np.ndarray, BSPStats]:
+        if prog is None:
+            raise ValueError("mode='dist' supports min-semiring programs (cc/sssp) only")
+        axes = _normalize_axes(mesh, axes)
+        ndev = int(np.prod([mesh.shape[a] for a in axes]))
+        if ndev != sub.num_parts:
+            raise ValueError(f"mesh axes {axes} span {ndev} devices but partition has {sub.num_parts} parts")
+        arrays, statics = subgraphs_to_arrays(sub)
+        stepper = make_distributed_stepper(
+            mesh, axes, prog, statics, num_supersteps=num_supersteps, inner_cap=inner_cap
+        )
+        if name == "cc":
+            init = init_cc(sub)
+        else:
+            init = init_sssp(sub, self.default_source() if source is None else int(source))
+        with mesh:
+            val, msgs = jax.jit(stepper)(arrays, init)
+        m = np.asarray(msgs, np.int64)
+        # The fixed-length scan retains only per-worker totals; per-step
+        # series are empty in distributed stats.
+        stats = BSPStats(
+            supersteps=num_supersteps,
+            messages_per_worker=m,
+            messages_per_step=np.zeros((0,), np.int64),
+            comp_work_per_worker=np.zeros((sub.num_parts,), np.int64),
+            inner_iters_per_step=np.zeros((0, sub.num_parts), np.int64),
+        )
+        return np.asarray(val[:, :-1]), stats
+
+    # --------------------------------------------------------------- lower
+
+    def lower(
+        self,
+        *,
+        mesh,
+        axes=None,
+        program: ProgramLike = "cc",
+        num_supersteps: int = 4,
+        inner_cap: int = 64,
+        symmetrize: Optional[bool] = None,
+        pad_multiple: Optional[int] = None,
+    ) -> LoweredBSP:
+        """AOT-lower the distributed BSP stepper (abstract or concrete)."""
+        name, prog = _resolve_program(program)
+        if prog is None:
+            raise ValueError("lowering supports min-semiring programs (cc/sssp) only")
+        axes = _normalize_axes(mesh, axes)
+        if self._spec is not None:
+            spec = self._spec
+        else:
+            spec = SubgraphSpec.of(
+                self.subgraphs_for(**self._build_params_for(name, prog, symmetrize, pad_multiple))
+            )
+        arrays, statics = spec.array_specs()
+        stepper = make_distributed_stepper(
+            mesh, axes, prog, statics, num_supersteps=num_supersteps, inner_cap=inner_cap
+        )
+        spec2 = P(axes, None)
+        spec3 = P(axes, None, None)
+        in_sh = (
+            {k: NamedSharding(mesh, spec3 if v.ndim == 3 else spec2) for k, v in arrays.items()},
+            NamedSharding(mesh, spec2),
+        )
+        with mesh:
+            t0 = time.time()
+            lowered = jax.jit(stepper, in_shardings=in_sh).lower(arrays, spec.value_spec(prog))
+            compiled = lowered.compile()
+            compile_s = time.time() - t0
+        return LoweredBSP(
+            spec=spec,
+            program=name,
+            mesh=mesh,
+            axes=axes,
+            lowered=lowered,
+            compiled=compiled,
+            compile_s=compile_s,
+            in_shardings=in_sh,
+        )
+
+
+@dataclasses.dataclass
+class PipelineRun:
+    """Result of one `GraphPipeline.run`: values + BSP stats + context."""
+
+    pipeline: GraphPipeline
+    program: str
+    values: np.ndarray  # [p, max_v] per-(part, local-vertex) values
+    stats: BSPStats
+    subgraphs: SubgraphSet
+
+    @property
+    def metrics(self) -> PartitionMetrics:
+        return self.pipeline.metrics
+
+    @property
+    def edges_per_worker(self) -> np.ndarray:
+        return np.asarray(self.subgraphs.edge_mask.sum(axis=1))
+
+    def to_global(self, reduce: str = "min") -> np.ndarray:
+        """Per-vertex values collected from master replicas."""
+        return alg.scatter_to_global(
+            self.subgraphs, self.values, self.pipeline.graph.num_vertices, reduce=reduce
+        )
+
+    def num_components(self) -> int:
+        """Distinct CC labels over covered vertices."""
+        cov = self.pipeline.graph.covered_vertices()
+        return int(np.unique(self.to_global()[cov]).shape[0])

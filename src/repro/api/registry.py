@@ -1,0 +1,185 @@
+"""Partitioner protocol + decorator registry.
+
+Partitioner modules self-register at import time:
+
+    @register_partitioner("ebg", config=EBGConfig, jit_compatible=True)
+    def ebg_partition(graph, num_parts, *, alpha=1.0, ...): ...
+
+The registry is the single source of truth for enumeration: the legacy
+`repro.core.PARTITIONERS` mapping (`RegistryFunctionView`), the benchmark
+suite's partitioner list (`benchmark_partitioners`), and the CLI name
+validation (`partitioner_names`) are all derived views.
+
+This module deliberately imports nothing from `repro.core` at module
+scope — core partitioner modules import *us* to register themselves, and
+`_ensure_builtins` imports `repro.core` lazily the first time the
+registry is queried.
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+from collections.abc import Mapping
+from typing import Callable, Optional, Protocol, runtime_checkable
+
+from repro.api.config import PartitionerConfig
+
+
+def check_num_parts(num_parts) -> None:
+    if not isinstance(num_parts, int) or isinstance(num_parts, bool) or num_parts < 1:
+        raise ValueError(f"num_parts must be a positive int, got {num_parts!r}")
+
+
+@runtime_checkable
+class Partitioner(Protocol):
+    """Anything that maps (graph, num_parts, **knobs) -> PartitionResult."""
+
+    def __call__(self, graph, num_parts: int, **kwargs):  # pragma: no cover
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionerSpec:
+    """A registered partitioner: callable + config schema + capabilities."""
+
+    name: str
+    fn: Callable
+    config_cls: type
+    deterministic: bool = True  # same inputs (incl. seed) -> same partition
+    chunked: bool = False  # processes edges in vectorized blocks
+    jit_compatible: bool = False  # core loop runs under jax.jit
+    benchmark_default: bool = True  # included in the paper benchmark suite
+    description: str = ""
+
+    @property
+    def accepted_kwargs(self) -> frozenset:
+        """Keyword parameters of `fn` beyond (graph, num_parts)."""
+        sig = inspect.signature(self.fn)
+        return frozenset(
+            n
+            for n, p in sig.parameters.items()
+            if p.kind in (p.KEYWORD_ONLY, p.POSITIONAL_OR_KEYWORD)
+            and n not in ("graph", "num_parts")
+        )
+
+    def make_config(self, config: Optional[PartitionerConfig] = None, **overrides) -> PartitionerConfig:
+        """Build (or update) this spec's config; raises on bad values."""
+        if config is not None:
+            if not isinstance(config, self.config_cls):
+                raise TypeError(
+                    f"partitioner {self.name!r} expects {self.config_cls.__name__}, "
+                    f"got {type(config).__name__}"
+                )
+            return config.replace(**overrides) if overrides else config
+        return self.config_cls(**overrides)
+
+    def check_overrides(self, overrides: dict) -> None:
+        """Explicitly-passed knobs must actually reach this algorithm.
+
+        Config *fields* the fn ignores are fine (config classes are shared
+        across variants), but a caller who names a knob deserves an error
+        rather than a silent no-op — e.g. `block` on the unblocked scan.
+        """
+        unused = set(overrides) - self.accepted_kwargs
+        if unused:
+            raise ValueError(
+                f"partitioner {self.name!r} does not use {sorted(unused)}; "
+                f"its knobs are {sorted(self.accepted_kwargs)}"
+            )
+
+    def partition(self, graph, num_parts: int, config: Optional[PartitionerConfig] = None, **overrides):
+        """Run the partitioner under a validated config."""
+        check_num_parts(num_parts)
+        cfg = self.make_config(config, **overrides)
+        self.check_overrides(overrides)
+        accepted = self.accepted_kwargs
+        kwargs = {k: v for k, v in cfg.to_kwargs().items() if k in accepted}
+        return self.fn(graph, num_parts, **kwargs)
+
+
+_REGISTRY: dict[str, PartitionerSpec] = {}
+
+
+def register_partitioner(
+    name: str,
+    *,
+    config: type = PartitionerConfig,
+    deterministic: bool = True,
+    chunked: bool = False,
+    jit_compatible: bool = False,
+    benchmark_default: bool = True,
+    description: str = "",
+):
+    """Decorator: register `fn` under `name`. Returns `fn` unchanged, so
+    legacy direct imports (`from repro.core import ebg_partition`) keep
+    working bit-for-bit."""
+
+    def deco(fn: Callable) -> Callable:
+        if name in _REGISTRY:
+            raise ValueError(f"partitioner {name!r} already registered ({_REGISTRY[name].fn})")
+        desc = description
+        if not desc and fn.__doc__:
+            desc = fn.__doc__.strip().splitlines()[0]
+        _REGISTRY[name] = PartitionerSpec(
+            name=name,
+            fn=fn,
+            config_cls=config,
+            deterministic=deterministic,
+            chunked=chunked,
+            jit_compatible=jit_compatible,
+            benchmark_default=benchmark_default,
+            description=desc,
+        )
+        return fn
+
+    return deco
+
+
+def _ensure_builtins() -> None:
+    """Importing repro.core registers all built-in partitioners."""
+    import repro.core  # noqa: F401
+
+
+def get_partitioner(name: str) -> PartitionerSpec:
+    _ensure_builtins()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown partitioner {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def list_partitioners() -> tuple[PartitionerSpec, ...]:
+    """All registered specs in registration order."""
+    _ensure_builtins()
+    return tuple(_REGISTRY.values())
+
+
+def partitioner_names() -> tuple[str, ...]:
+    return tuple(s.name for s in list_partitioners())
+
+
+def benchmark_partitioners() -> tuple[str, ...]:
+    """Names enumerated by the paper benchmark suite (derived, not hand-kept)."""
+    return tuple(s.name for s in list_partitioners() if s.benchmark_default)
+
+
+class RegistryFunctionView(Mapping):
+    """LIVE `{name: fn}` view of the registry — backs the legacy
+    `repro.core.PARTITIONERS` so partitioners registered after import are
+    still visible through the old entry point."""
+
+    def __getitem__(self, name: str) -> Callable:
+        return get_partitioner(name).fn
+
+    def __iter__(self):
+        _ensure_builtins()
+        return iter(list(_REGISTRY))
+
+    def __len__(self) -> int:
+        _ensure_builtins()
+        return len(_REGISTRY)
+
+    def __repr__(self) -> str:
+        return f"RegistryFunctionView({list(self)})"

@@ -1,12 +1,17 @@
-"""Fault-tolerant checkpointing: sharded msgpack+zstd leaves, atomic
+"""Fault-tolerant checkpointing: sharded zstd-compressed leaves, atomic
 manifest, latest-step discovery, async save thread.
 
 Layout:  <dir>/step_000123/
-            manifest.json   {step, leaves: [{path, shape, dtype, file}]}
-            L00000.bin.zst  raw little-endian bytes per leaf
+            manifest.json   {step, leaves: [{path, shape, dtype, file, codec}]}
+            L00000.bin.zst  raw little-endian bytes per leaf (zstd), or
+            L00000.bin      uncompressed when zstandard is not installed
 A checkpoint only "exists" once manifest.json is renamed into place, so a
 killed writer never corrupts restart (tests/test_checkpoint.py kills a
 training loop mid-save and restarts bitwise-identically).
+
+`zstandard` is an optional dependency (the `ckpt` extra): without it,
+saves degrade to uncompressed leaves and restores of compressed
+checkpoints raise with an install hint.
 """
 from __future__ import annotations
 
@@ -17,7 +22,11 @@ from pathlib import Path
 
 import jax
 import numpy as np
-import zstandard
+
+try:  # optional dep — degrade to uncompressed leaves when absent
+    import zstandard
+except ModuleNotFoundError:
+    zstandard = None
 
 _KEY_SEP = "|"
 
@@ -39,14 +48,19 @@ def save(ckpt_dir: str | Path, step: int, tree) -> Path:
         shutil.rmtree(tmp)
     tmp.mkdir(parents=True)
     leaves, _ = _flatten_with_paths(tree)
-    cctx = zstandard.ZstdCompressor(level=3)
+    cctx = zstandard.ZstdCompressor(level=3) if zstandard is not None else None
     manifest = {"step": step, "leaves": []}
     for i, (key, leaf) in enumerate(leaves):
         arr = np.asarray(leaf)
-        fn = f"L{i:05d}.bin.zst"
-        (tmp / fn).write_bytes(cctx.compress(arr.tobytes()))
+        payload = arr.tobytes()
+        if cctx is None:
+            fn, codec = f"L{i:05d}.bin", "raw"
+        else:
+            fn, codec = f"L{i:05d}.bin.zst", "zstd"
+            payload = cctx.compress(payload)
+        (tmp / fn).write_bytes(payload)
         manifest["leaves"].append(
-            dict(path=key, shape=list(arr.shape), dtype=str(arr.dtype), file=fn)
+            dict(path=key, shape=list(arr.shape), dtype=str(arr.dtype), file=fn, codec=codec)
         )
     (tmp / "manifest.json").write_text(json.dumps(manifest))
     if final.exists():
@@ -70,13 +84,24 @@ def restore(ckpt_dir: str | Path, step: int, like_tree):
     """Restore into the structure (and shardings) of `like_tree`."""
     d = Path(ckpt_dir) / f"step_{step:08d}"
     manifest = json.loads((d / "manifest.json").read_text())
-    dctx = zstandard.ZstdDecompressor()
+    dctx = zstandard.ZstdDecompressor() if zstandard is not None else None
     by_path = {m["path"]: m for m in manifest["leaves"]}
     leaves, treedef = _flatten_with_paths(like_tree)
     out = []
     for key, like in leaves:
         m = by_path[key]
-        raw = dctx.decompress((d / m["file"]).read_bytes())
+        raw = (d / m["file"]).read_bytes()
+        # Pre-codec manifests only ever wrote zstd leaves.
+        codec = m.get("codec", "zstd")
+        if codec == "zstd":
+            if dctx is None:
+                raise ModuleNotFoundError(
+                    f"checkpoint leaf {m['file']} is zstd-compressed but 'zstandard' "
+                    "is not installed (pip install zstandard, or the 'ckpt' extra)"
+                )
+            raw = dctx.decompress(raw)
+        elif codec != "raw":
+            raise ValueError(f"unknown checkpoint codec {codec!r} for leaf {m['file']}")
         arr = np.frombuffer(raw, dtype=np.dtype(m["dtype"])).reshape(m["shape"])
         if hasattr(like, "sharding"):
             arr = jax.device_put(arr.astype(like.dtype), like.sharding)

@@ -1,0 +1,36 @@
+"""Version-compatibility shims for jax APIs that moved between releases.
+
+The repo targets current jax but must degrade on older runtimes:
+  * `jax.shard_map` (with `check_vma`) was `jax.experimental.shard_map.
+    shard_map` (with `check_rep`) on 0.4.x;
+  * `jax.make_mesh`'s `axis_types` / `jax.sharding.AxisType` only exist
+    on newer releases.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map_compat(f, *, mesh, in_specs, out_specs):
+    """Unchecked shard_map across jax versions."""
+    if hasattr(jax, "shard_map"):  # jax >= 0.6
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _shard_map  # jax 0.4.x
+
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)
+
+
+def cost_analysis_compat(compiled) -> dict:
+    """`Compiled.cost_analysis()`: dict on new jax, [dict] on 0.4.x."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
+def make_mesh_compat(shape: tuple, axes: tuple):
+    """jax.make_mesh with Auto axis types where the API supports them."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)

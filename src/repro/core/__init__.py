@@ -1,7 +1,15 @@
-"""repro.core — the paper's contribution: partitioners + metrics."""
-from repro.core.baselines import cvc_partition, dbh_partition, random_hash_partition
+"""repro.core — the paper's contribution: partitioners + metrics.
+
+Partitioner modules self-register with the `repro.api` registry at import
+time (see `repro.api.register_partitioner`). The `PARTITIONERS` dict
+below is a *derived* backwards-compatibility view of that registry — new
+code should use `repro.api.get_partitioner` / `GraphPipeline` instead.
+"""
+from repro.api.registry import RegistryFunctionView
 from repro.core.ebg import ebg_partition, ebg_partition_chunked
 from repro.core.ebg_np import ebg_partition_np
+from repro.core.baselines import cvc_partition, dbh_partition, random_hash_partition
+from repro.core.ne import ne_partition
 from repro.core.metis_like import metis_like_partition
 from repro.core.metrics import (
     PartitionMetrics,
@@ -10,19 +18,12 @@ from repro.core.metrics import (
     theorem1_edge_bound,
     theorem2_vertex_bound,
 )
-from repro.core.ne import ne_partition
 from repro.core.order import degree_sum_order
 from repro.core.types import Graph, PartitionResult
 
-PARTITIONERS = {
-    "ebg": ebg_partition,
-    "ebg_chunked": ebg_partition_chunked,
-    "dbh": dbh_partition,
-    "cvc": cvc_partition,
-    "ne": ne_partition,
-    "metis": metis_like_partition,
-    "hash": random_hash_partition,
-}
+# DEPRECATED: kept for legacy call sites. A live Mapping over the repro.api
+# registry — partitioners registered later remain visible through it.
+PARTITIONERS = RegistryFunctionView()
 
 __all__ = [
     "Graph",

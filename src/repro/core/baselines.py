@@ -8,6 +8,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.api.config import HashConfig
+from repro.api.registry import register_partitioner
 from repro.core.types import Graph, PartitionResult
 
 _MIX = np.uint64(0x9E3779B97F4A7C15)
@@ -21,6 +23,13 @@ def _hash_u64(x: np.ndarray, seed: int = 0) -> np.ndarray:
     return z ^ (z >> np.uint64(31))
 
 
+@register_partitioner(
+    "hash",
+    config=HashConfig,
+    deterministic=True,
+    benchmark_default=False,
+    description="Random edge hashing (Giraph/PowerGraph default)",
+)
 def random_hash_partition(graph: Graph, num_parts: int, *, seed: int = 0) -> PartitionResult:
     """Random edge hashing (Giraph/PowerGraph default)."""
     src = np.asarray(graph.src, dtype=np.uint64)
@@ -29,6 +38,12 @@ def random_hash_partition(graph: Graph, num_parts: int, *, seed: int = 0) -> Par
     return PartitionResult(part=(h % np.uint64(num_parts)).astype(np.int32), num_parts=num_parts)
 
 
+@register_partitioner(
+    "dbh",
+    config=HashConfig,
+    deterministic=True,
+    description="Degree-Based Hashing [Xie et al., NeurIPS'14]",
+)
 def dbh_partition(graph: Graph, num_parts: int, *, seed: int = 0) -> PartitionResult:
     """Degree-Based Hashing [Xie et al., NeurIPS'14].
 
@@ -51,6 +66,12 @@ def _grid_shape(p: int) -> tuple[int, int]:
     return pr, p // pr
 
 
+@register_partitioner(
+    "cvc",
+    config=HashConfig,
+    deterministic=True,
+    description="Cartesian Vertex-Cut 2D grid hashing [Boman et al., SC'13]",
+)
 def cvc_partition(graph: Graph, num_parts: int, *, seed: int = 0) -> PartitionResult:
     """Cartesian Vertex-Cut [Boman et al., SC'13] — 2D block partition of the
     adjacency matrix: edge (u,v) -> block (h(u) mod pr, h(v) mod pc)."""

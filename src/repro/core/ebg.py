@@ -32,6 +32,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.config import EBGConfig
+from repro.api.registry import register_partitioner
 from repro.core.order import degree_sum_order
 from repro.core.types import Graph, PartitionResult
 
@@ -68,6 +70,13 @@ def _ebg_scan(src, dst, *, num_parts: int, num_vertices: int, alpha: float, beta
     return part, keep, e_count, v_count
 
 
+@register_partitioner(
+    "ebg",
+    config=EBGConfig,
+    deterministic=True,
+    jit_compatible=True,
+    description="Faithful EBG scan (paper Algorithm 1 + degree-sum order)",
+)
 def ebg_partition(
     graph: Graph,
     num_parts: int,
@@ -99,11 +108,17 @@ def ebg_partition(
 @functools.partial(
     jax.jit, static_argnames=("num_parts", "num_vertices", "block")
 )
-def _ebg_chunked(src, dst, *, num_parts: int, num_vertices: int, alpha: float, beta: float, block: int):
+def _ebg_chunked(
+    src, dst, valid, num_real_edges, *, num_parts: int, num_vertices: int,
+    alpha: float, beta: float, block: int,
+):
     E = src.shape[0]
     p = num_parts
     assert E % block == 0
-    inv_e = p / jnp.float32(E)
+    # Balance terms are normalized by the REAL edge count — pad edges must
+    # not dilute the alpha term. Traced (not static) so graphs sharing a
+    # padded shape share one compiled executable.
+    inv_e = p / num_real_edges.astype(jnp.float32)
     inv_v = p / jnp.float32(num_vertices)
 
     keep0 = jnp.zeros((p, num_vertices), dtype=jnp.bool_)
@@ -112,35 +127,50 @@ def _ebg_chunked(src, dst, *, num_parts: int, num_vertices: int, alpha: float, b
 
     def step(state, uv_block):
         keep, e_count, v_count = state
-        ub, vb = uv_block  # [B]
+        ub, vb, valb = uv_block  # [B]
         # Vectorized membership lookups against block-start keep: (p, B).
         miss_u = ~keep[:, ub]
         miss_v = ~keep[:, vb]
         memb = miss_u.astype(jnp.float32) + miss_v.astype(jnp.float32)
 
-        # Sequential exact commit of balance terms within the block.
+        # Sequential exact commit of balance terms within the block. Pad
+        # edges are scored (uniform work per lane) but never committed:
+        # they leave e_count/v_count untouched and route to row `p`.
         def body(j, carry):
             e_c, v_c, parts = carry
             score = memb[:, j] + alpha * e_c * inv_e + beta * v_c * inv_v
             i = jnp.argmin(score).astype(jnp.int32)
-            e_c = e_c.at[i].add(1.0)
-            v_c = v_c.at[i].add(miss_u[i, j].astype(jnp.float32) + miss_v[i, j].astype(jnp.float32))
-            return e_c, v_c, parts.at[j].set(i)
+            live = valb[j].astype(jnp.float32)
+            e_c = e_c.at[i].add(live)
+            v_c = v_c.at[i].add(live * (miss_u[i, j].astype(jnp.float32) + miss_v[i, j].astype(jnp.float32)))
+            return e_c, v_c, parts.at[j].set(jnp.where(valb[j], i, p))
 
         e_count, v_count, parts = jax.lax.fori_loop(
             0, ub.shape[0], body, (e_count, v_count, jnp.zeros((ub.shape[0],), jnp.int32))
         )
-        # Batched keep update after the block commits.
-        keep = keep.at[parts, ub].set(True)
-        keep = keep.at[parts, vb].set(True)
+        # Batched keep update after the block commits; pad edges carry the
+        # out-of-bounds row `p` and are dropped by the scatter.
+        keep = keep.at[parts, ub].set(True, mode="drop")
+        keep = keep.at[parts, vb].set(True, mode="drop")
         return (keep, e_count, v_count), parts
 
     (keep, e_count, v_count), part = jax.lax.scan(
-        step, (keep0, e0, v0), (src.reshape(-1, block), dst.reshape(-1, block))
+        step,
+        (keep0, e0, v0),
+        (src.reshape(-1, block), dst.reshape(-1, block), valid.reshape(-1, block)),
     )
     return part.reshape(-1), keep, e_count, v_count
 
 
+@register_partitioner(
+    "ebg_chunked",
+    config=EBGConfig,
+    deterministic=True,
+    chunked=True,
+    jit_compatible=True,
+    benchmark_default=False,
+    description="Blocked EBG throughput variant (block=1 ≡ faithful)",
+)
 def ebg_partition_chunked(
     graph: Graph,
     num_parts: int,
@@ -158,13 +188,18 @@ def ebg_partition_chunked(
         src, dst = src[order], dst[order]
     E = src.shape[0]
     pad = (-E) % block
+    valid = np.ones((E + pad,), bool)
     if pad:
-        # Pad with a self-loop on vertex 0; dropped from the result.
+        # Pad with self-loops on vertex 0, masked out of the commit loop
+        # (and dropped from the result).
         src = np.concatenate([src, np.zeros((pad,), np.int32)])
         dst = np.concatenate([dst, np.zeros((pad,), np.int32)])
+        valid[E:] = False
     part, _, _, _ = _ebg_chunked(
         jnp.asarray(src),
         jnp.asarray(dst),
+        jnp.asarray(valid),
+        jnp.float32(E),
         num_parts=num_parts,
         num_vertices=graph.num_vertices,
         alpha=float(alpha),

@@ -13,6 +13,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.api.config import MetisLikeConfig
+from repro.api.registry import register_partitioner
 from repro.core.types import Graph, PartitionResult
 
 
@@ -141,6 +143,12 @@ def _lp_refine(eu, ev, ew, vw, part, p, passes=6, tol=1.05):
     return part
 
 
+@register_partitioner(
+    "metis",
+    config=MetisLikeConfig,
+    deterministic=True,
+    description="Multilevel METIS-style vertex partitioner (derived edge cut)",
+)
 def metis_like_partition(
     graph: Graph,
     num_parts: int,

@@ -40,7 +40,7 @@ def partition_metrics(graph: Graph, result: PartitionResult) -> PartitionMetrics
 
     # |V| counted over vertices actually covered by edges (isolated vertices
     # have no replicas in any edge partition).
-    covered = np.unique(np.concatenate([src, dst])).shape[0]
+    covered = graph.covered_vertices().shape[0]
 
     E = part.shape[0]
     rep = float(v_counts.sum()) / max(covered, 1)

@@ -16,9 +16,17 @@ import heapq
 
 import numpy as np
 
+from repro.api.config import NEConfig
+from repro.api.registry import register_partitioner
 from repro.core.types import Graph, PartitionResult
 
 
+@register_partitioner(
+    "ne",
+    config=NEConfig,
+    deterministic=True,
+    description="Neighbor Expansion search baseline [Zhang et al., KDD'17]",
+)
 def ne_partition(graph: Graph, num_parts: int, *, seed: int = 0) -> PartitionResult:
     src = np.asarray(graph.src, dtype=np.int64)
     dst = np.asarray(graph.dst, dtype=np.int64)

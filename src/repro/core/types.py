@@ -37,6 +37,12 @@ class Graph:
         deg += np.bincount(dst, minlength=self.num_vertices)
         return deg.astype(np.int64)
 
+    def covered_vertices(self) -> np.ndarray:
+        """Sorted unique vertices incident to at least one edge. Isolated
+        vertices have no replicas in any edge partition, so coverage is the
+        domain for replication metrics, CC labels, and SSSP sources."""
+        return np.unique(np.concatenate([np.asarray(self.src), np.asarray(self.dst)]))
+
     def validate(self) -> None:
         src = np.asarray(self.src)
         dst = np.asarray(self.dst)

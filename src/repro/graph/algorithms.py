@@ -100,5 +100,7 @@ def partition_and_build(
     symmetrize: bool = False,
     **kw,
 ) -> tuple[PartitionResult, SubgraphSet]:
+    """DEPRECATED glue — prefer `repro.api.GraphPipeline`, which caches the
+    partition/build stages and owns the engine/metrics lifecycle."""
     result = partitioner(graph, num_parts, **kw)
     return result, build_subgraphs(graph, result, symmetrize=symmetrize)

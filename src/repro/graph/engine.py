@@ -32,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map_compat
 from repro.graph.build import SubgraphSet
 
 INF_F32 = jnp.float32(3.0e38)
@@ -378,8 +379,6 @@ def make_distributed_stepper(
     Takes the subgraph tensors as a dict (see `subgraphs_to_arrays`) so the
     sharding specs form a clean pytree.
     """
-    shard_map = jax.shard_map
-
     axis_tuple = axes if isinstance(axes, tuple) else (axes,)
     spec3 = P(axis_tuple, None, None)
     spec2 = P(axis_tuple, None)
@@ -403,4 +402,4 @@ def make_distributed_stepper(
         )
         return val_out, msgs
 
-    return shard_map(stepper, mesh=mesh, in_specs=in_specs, out_specs=(spec2, P(axis_tuple)), check_vma=False)
+    return shard_map_compat(stepper, mesh=mesh, in_specs=in_specs, out_specs=(spec2, P(axis_tuple)))

@@ -5,59 +5,34 @@ Lowers the shard_map'd CC stepper for p=512 subgraphs (one per chip across
 Friendster-scale padded sizes: |E|≈3.6B directed edges → ~8M edges per
 subgraph, ~1M local vertices, 2048-slot pairwise message buffers. The EBG
 balance guarantees (Theorems 1/2) are what make these fixed paddings safe.
+
+The lowering itself goes through the `repro.api` facade: an abstract
+`GraphPipeline.from_spec(SubgraphSpec(...)).lower(mesh=...)` — the same
+entry a concretely partitioned pipeline uses for distributed execution.
 """
 from __future__ import annotations
 
-import time
-
-import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
-
-from repro.graph.engine import CC, make_distributed_stepper
+from repro.api import GraphPipeline, SubgraphSpec
+from repro.compat import cost_analysis_compat
+from repro.graph.engine import CC
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import parse_collectives, roofline_terms
 
 
-def graph_input_specs(p: int, max_v: int = 1 << 20, max_e: int = 8 << 20, max_msg: int = 2048):
-    f32, i32, b = jnp.float32, jnp.int32, jnp.bool_
-    e2 = lambda dt: jax.ShapeDtypeStruct((p, max_e), dt)
-    v2 = lambda dt: jax.ShapeDtypeStruct((p, max_v), dt)
-    m3 = lambda dt: jax.ShapeDtypeStruct((p, p, max_msg), dt)
-    arrays = dict(
-        lsrc=e2(i32), ldst=e2(i32), weight=e2(f32), edge_mask=e2(b),
-        lsrc_s=e2(i32), ldst_s=e2(i32), weight_s=e2(f32), edge_mask_s=e2(b),
-        gid=v2(i32), vmask=v2(b), is_master=v2(b), out_degree=v2(f32),
-        send_idx=m3(i32), recv_idx=m3(i32), msg_mask=m3(b), recv_mask=m3(b),
-    )
-    statics = dict(num_parts=p, max_v=max_v, max_e=max_e, max_msg=max_msg)
-    val = jax.ShapeDtypeStruct((p, max_v + 1), jnp.int32)
-    return arrays, statics, val
+def friendster_spec(p: int, max_v: int = 1 << 20, max_e: int = 8 << 20, max_msg: int = 2048) -> SubgraphSpec:
+    return SubgraphSpec(num_parts=p, max_v=max_v, max_e=max_e, max_msg=max_msg)
 
 
 def run_graph_dryrun(*, multi_pod: bool = False, num_supersteps: int = 4, inner_cap: int = 64):
     mesh = make_production_mesh(multi_pod=multi_pod)
-    axes = mesh.axis_names  # subgraphs over ALL axes: p == #chips
+    axes = tuple(mesh.axis_names)  # subgraphs over ALL axes: p == #chips
     p = len(mesh.devices.reshape(-1))
-    arrays, statics, val = graph_input_specs(p)
-    stepper = make_distributed_stepper(
-        mesh, tuple(axes), CC, statics, num_supersteps=num_supersteps, inner_cap=inner_cap
+    low = GraphPipeline.from_spec(friendster_spec(p)).lower(
+        mesh=mesh, axes=axes, program=CC, num_supersteps=num_supersteps, inner_cap=inner_cap
     )
-    spec2 = P(tuple(axes), None)
-    spec3 = P(tuple(axes), None, None)
-    in_sh = (
-        {k: NamedSharding(mesh, spec3 if v.ndim == 3 else spec2) for k, v in arrays.items()},
-        NamedSharding(mesh, spec2),
-    )
-    with mesh:
-        t0 = time.time()
-        lowered = jax.jit(stepper, in_shardings=in_sh).lower(arrays, val)
-        compiled = lowered.compile()
-        compile_s = time.time() - t0
-        mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
-        text = compiled.as_text()
-    coll = parse_collectives(text)
+    mem = low.compiled.memory_analysis()
+    cost = cost_analysis_compat(low.compiled)
+    coll = parse_collectives(low.compiled.as_text())
     flops = float(cost.get("flops", 0.0))
     hbm = float(cost.get("bytes accessed", 0.0))
     terms = roofline_terms(flops, hbm, coll.total_link_bytes)
@@ -66,7 +41,7 @@ def run_graph_dryrun(*, multi_pod: bool = False, num_supersteps: int = 4, inner_
         shape=f"p{p}_friendster_scale",
         mesh="2x16x16" if multi_pod else "16x16",
         chips=p,
-        compile_s=round(compile_s, 2),
+        compile_s=round(low.compile_s, 2),
         flops_per_device=flops,
         hbm_bytes_per_device=hbm,
         link_bytes_per_device=coll.total_link_bytes,

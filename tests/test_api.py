@@ -1,0 +1,300 @@
+"""Tests for the `repro.api` registry + `GraphPipeline` facade."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    EBGConfig,
+    EBVConfig,
+    GraphPipeline,
+    HashConfig,
+    MetisLikeConfig,
+    NEConfig,
+    benchmark_partitioners,
+    get_partitioner,
+    list_partitioners,
+    partitioner_names,
+)
+from repro.core import PARTITIONERS
+
+ALL_NAMES = partitioner_names()
+
+
+# ------------------------------------------------------------------ registry
+
+
+def test_registry_discovers_all_partitioners():
+    assert set(ALL_NAMES) == {"ebg", "ebg_chunked", "dbh", "cvc", "ne", "metis", "hash"}
+
+
+def test_legacy_dict_is_registry_view():
+    """`repro.core.PARTITIONERS` is a live view of the registry — no
+    hand-maintained dict, and late registrations stay visible."""
+    from repro.api.config import PartitionerConfig
+    from repro.api.registry import _REGISTRY, register_partitioner
+
+    specs = {s.name: s for s in list_partitioners()}
+    assert set(PARTITIONERS) == set(specs)
+    for name, fn in PARTITIONERS.items():
+        assert fn is specs[name].fn
+
+    @register_partitioner("_test_late", config=PartitionerConfig, benchmark_default=False)
+    def late(graph, num_parts):  # pragma: no cover - lookup only
+        raise NotImplementedError
+
+    try:
+        assert PARTITIONERS["_test_late"] is late
+        assert "_test_late" in PARTITIONERS
+    finally:
+        _REGISTRY.pop("_test_late")
+
+
+def test_benchmark_enumeration_is_capability_driven():
+    bench = benchmark_partitioners()
+    assert "ebg" in bench and "dbh" in bench
+    # variants/baselines flagged out of the default suite stay registered
+    assert "ebg_chunked" not in bench and "hash" not in bench
+    assert set(bench) <= set(ALL_NAMES)
+
+
+def test_capability_flags():
+    assert get_partitioner("ebg").jit_compatible
+    assert get_partitioner("ebg_chunked").chunked
+    assert not get_partitioner("ne").jit_compatible
+    assert all(s.deterministic for s in list_partitioners())
+
+
+def test_unknown_partitioner_raises():
+    with pytest.raises(KeyError, match="unknown partitioner"):
+        get_partitioner("nope")
+
+
+# ------------------------------------------------------------------- configs
+
+
+def test_config_validation_raises_value_error():
+    with pytest.raises(ValueError):
+        EBGConfig(alpha=-1.0)
+    with pytest.raises(ValueError):
+        EBGConfig(beta=0.0)
+    with pytest.raises(ValueError):
+        EBGConfig(block=0)
+    with pytest.raises(ValueError):
+        HashConfig(seed=-3)
+    with pytest.raises(ValueError):
+        NEConfig(seed=-1)
+    with pytest.raises(ValueError):
+        MetisLikeConfig(coarsen_to=1)
+
+
+def test_ebv_alias_is_paper_name():
+    assert EBVConfig is EBGConfig
+
+
+def test_config_replace_revalidates():
+    cfg = EBGConfig(alpha=2.0)
+    assert cfg.replace(beta=3.0).beta == 3.0
+    with pytest.raises(ValueError):
+        cfg.replace(alpha=-2.0)
+
+
+def test_bad_num_parts_raises(tiny_powerlaw):
+    with pytest.raises(ValueError):
+        get_partitioner("ebg").partition(tiny_powerlaw, 0)
+    with pytest.raises(ValueError):
+        GraphPipeline(tiny_powerlaw).partition("ebg", parts=-2)
+    with pytest.raises(ValueError):
+        GraphPipeline(tiny_powerlaw).partition("ebg", parts=2, alpha=-1.0)
+
+
+def test_wrong_config_type_raises(tiny_powerlaw):
+    with pytest.raises(TypeError):
+        GraphPipeline(tiny_powerlaw).partition("hash", parts=4, config=EBGConfig())
+    with pytest.raises(TypeError):
+        GraphPipeline(tiny_powerlaw).partition("hash", parts=4, alpha=2.0)
+
+
+def test_override_unused_by_algorithm_raises(tiny_powerlaw):
+    """`block` is a valid EBGConfig field but the unblocked scan ignores it —
+    naming it explicitly must error, not silently no-op."""
+    with pytest.raises(ValueError, match="does not use"):
+        GraphPipeline(tiny_powerlaw).partition("ebg", parts=4, block=1024)
+    # ...while the chunked variant consumes it.
+    pipe = GraphPipeline(tiny_powerlaw).partition("ebg_chunked", parts=4, block=64)
+    assert pipe.config.block == 64
+
+
+# ------------------------------------------------------------------ pipeline
+
+
+@pytest.mark.parametrize("name", ALL_NAMES)
+def test_every_partitioner_end_to_end_through_pipeline(tiny_powerlaw, name):
+    """Each registered partitioner runs partition → build → CC → metrics."""
+    run = GraphPipeline(tiny_powerlaw).partition(name, parts=4).run("cc")
+    m = run.metrics
+    assert m.replication_factor >= 1.0 - 1e-9
+    assert m.edges_per_part.sum() == tiny_powerlaw.num_edges
+    assert m.edge_imbalance >= 1.0 and m.vertex_imbalance >= 1.0
+    assert run.stats.supersteps >= 1 and run.stats.total_messages > 0
+    assert run.values.shape[0] == 4
+    assert run.edges_per_worker.sum() == 2 * tiny_powerlaw.num_edges  # CC symmetrizes
+
+
+def test_pipeline_cc_matches_reference(tiny_powerlaw):
+    from repro.graph import algorithms as alg
+
+    run = GraphPipeline(tiny_powerlaw).partition("ebg", parts=4).run("cc")
+    glob = run.to_global()
+    ref = alg.cc_reference(tiny_powerlaw)
+    cov = tiny_powerlaw.covered_vertices()
+    np.testing.assert_array_equal(glob[cov], ref[cov])
+
+
+def test_pipeline_stages_are_cached(tiny_powerlaw):
+    pipe = GraphPipeline(tiny_powerlaw).partition("ebg", parts=4)
+    assert pipe.result is pipe.result
+    assert pipe.metrics is pipe.metrics
+    sym = pipe.build(symmetrize=True)
+    assert sym.subgraphs is sym.subgraphs
+    # build cache is shared across fluent views, keyed by build params
+    assert sym.subgraphs is pipe.subgraphs_for(symmetrize=True)
+    assert sym.subgraphs is not pipe.subgraphs_for(symmetrize=False)
+    # a run without explicit build reuses the program-default build
+    assert pipe.run("cc").subgraphs is sym.subgraphs
+
+
+def test_explicit_pad_multiple_overrides_pinned_build(tiny_powerlaw):
+    pipe = GraphPipeline(tiny_powerlaw).partition("ebg", parts=4).build(symmetrize=True)
+    run = pipe.run("cc", pad_multiple=16)
+    assert run.subgraphs.max_e % 16 == 0
+    assert run.subgraphs is pipe.subgraphs_for(symmetrize=True, pad_multiple=16)
+
+
+def test_clear_builds_keeps_partition_and_metrics(tiny_powerlaw):
+    pipe = GraphPipeline(tiny_powerlaw).partition("ebg", parts=4)
+    result, metrics = pipe.result, pipe.metrics
+    first = pipe.subgraphs_for(symmetrize=True)
+    pipe.clear_builds()
+    assert pipe.result is result and pipe.metrics is metrics
+    assert pipe.subgraphs_for(symmetrize=True) is not first
+
+
+def test_pipeline_run_programs(tiny_powerlaw):
+    pipe = GraphPipeline(tiny_powerlaw).partition("ebg", parts=4)
+    sssp = pipe.run("sssp")
+    assert np.isfinite(sssp.to_global()[pipe.default_source()])
+    pr = pipe.run("pr", num_iters=5)
+    total = pr.to_global(reduce="min")
+    cov = tiny_powerlaw.covered_vertices()
+    assert np.isfinite(total[cov]).all()
+    with pytest.raises(ValueError):
+        pipe.run("not_a_program")
+    with pytest.raises(ValueError):
+        pipe.run("cc", mode="warp")
+
+
+def test_stock_min_programs_accepted_custom_rejected(tiny_powerlaw):
+    from repro.graph.engine import CC, SSSP, MinProgram
+
+    pipe = GraphPipeline(tiny_powerlaw).partition("ebg", parts=4)
+    by_obj = pipe.run(CC)
+    by_name = pipe.run("cc")
+    np.testing.assert_array_equal(by_obj.values, by_name.values)
+    assert pipe.run(SSSP).program == "sssp"
+    with pytest.raises(ValueError, match="unsupported MinProgram"):
+        pipe.run(MinProgram("bfs", use_weight=False, bidirectional=False, dtype="int32"))
+
+
+def test_pipeline_requires_partition_stage(tiny_powerlaw):
+    with pytest.raises(RuntimeError, match="partition"):
+        GraphPipeline(tiny_powerlaw).run("cc")
+
+
+# --------------------------------------------------------------------- shims
+
+
+@pytest.mark.parametrize("name", ALL_NAMES)
+def test_legacy_entry_points_match_pipeline_bit_for_bit(tiny_powerlaw, name):
+    """`PARTITIONERS[name](g, p)` and the registry/pipeline path agree
+    exactly — the shim is behavior-preserving."""
+    legacy = PARTITIONERS[name](tiny_powerlaw, 8)
+    piped = GraphPipeline(tiny_powerlaw).partition(name, parts=8).result
+    np.testing.assert_array_equal(legacy.part_in_input_order(), piped.part_in_input_order())
+
+
+def test_chunked_pad_edges_not_committed(paper_example):
+    """Single-block runs with and without pad edges assign real edges
+    identically: pads are masked out of the commit loop and the balance
+    normalization uses the real |E|."""
+    from repro.core import ebg_partition_chunked
+
+    E = paper_example.num_edges  # 12
+    no_pad = ebg_partition_chunked(paper_example, 2, block=E)
+    padded = ebg_partition_chunked(paper_example, 2, block=E + 4)
+    np.testing.assert_array_equal(np.asarray(no_pad.part), np.asarray(padded.part))
+
+
+# ------------------------------------------------------------------- dry-run
+
+
+def test_abstract_spec_shapes():
+    from repro.api import SubgraphSpec
+    from repro.graph.engine import CC
+
+    spec = SubgraphSpec(num_parts=4, max_v=16, max_e=32, max_msg=8)
+    arrays, statics = spec.array_specs()
+    assert arrays["lsrc"].shape == (4, 32)
+    assert arrays["send_idx"].shape == (4, 4, 8)
+    assert statics == dict(num_parts=4, max_v=16, max_e=32, max_msg=8)
+    assert spec.value_spec(CC).shape == (4, 17)
+
+
+def test_spec_of_built_subgraphs(tiny_powerlaw):
+    from repro.api import SubgraphSpec
+
+    pipe = GraphPipeline(tiny_powerlaw).partition("ebg", parts=4)
+    sub = pipe.build(symmetrize=True).subgraphs
+    spec = SubgraphSpec.of(sub)
+    assert spec.num_parts == 4
+    assert spec.max_v == sub.max_v and spec.max_e == sub.max_e
+
+
+def test_dist_mode_and_lower_match_sim():
+    """mode='dist' + .lower() need >1 device; XLA locks the device count at
+    first init, so this runs in a subprocess (same mechanism as
+    tests/test_system.py)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = str(Path(__file__).resolve().parents[1] / "src")
+    out = subprocess.run(
+        [sys.executable, "-c", """
+import numpy as np
+from repro.api import GraphPipeline
+from repro.graph.generate import make_graph
+from repro.launch.mesh import make_host_mesh
+
+g = make_graph('tiny_powerlaw')
+pipe = GraphPipeline(g).partition('ebg', parts=4)
+mesh = make_host_mesh(4)
+sim = pipe.run('cc')
+dist = pipe.run('cc', mode='dist', mesh=mesh, num_supersteps=10, inner_cap=100)
+np.testing.assert_array_equal(sim.values, dist.values)
+assert dist.stats.total_messages > 0
+try:
+    pipe.run('cc', mode='dist', mesh=make_host_mesh(2), num_supersteps=2)
+except ValueError as e:
+    assert 'parts' in str(e)
+else:
+    raise AssertionError('mesh/parts mismatch not caught')
+low = pipe.lower(mesh=mesh, program='cc', num_supersteps=2, inner_cap=8)
+assert low.compiled.memory_analysis() is not None
+print('OK')
+"""],
+        capture_output=True, text=True, env=env, timeout=560,
+    )
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    assert "OK" in out.stdout

@@ -1,5 +1,8 @@
 """Hypothesis property tests: system invariants + the paper's Theorems 1/2."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional dep: install the 'test' extra")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
