@@ -36,7 +36,8 @@ def simulated_runtime(stats, edges_per_worker, t_edge: float) -> float:
     return float(per_step.sum())
 
 
-def run(scale: float = 1.0, algos=("cc", "pr", "sssp"), partitioners=PARTS):
+def run(scale: float = 1.0, algos=("cc", "pr", "sssp"), partitioners=PARTS,
+        compute_backend="xla", warmup=False):
     out = {}
     for key in GRAPHS:
         _, p = load_graph(key, scale)
@@ -46,8 +47,18 @@ def run(scale: float = 1.0, algos=("cc", "pr", "sssp"), partitioners=PARTS):
             row = {}
             for name in partitioners:
                 pipe = get_pipeline(key, scale, name, p).prepare(algo)
+                kw = dict(compute_backend=compute_backend)
+                if warmup:
+                    # Compile the backend's jitted superstep outside the
+                    # timer (one step suffices — the compile is keyed on the
+                    # static args, not the step count), so backend A/B walls
+                    # compare hot paths, not compiles.
+                    if algo == "pr":
+                        pipe.run(algo, num_iters=1, **kw)
+                    else:
+                        pipe.run(algo, max_supersteps=1, **kw)
                 t0 = time.time()
-                r = pipe.run(algo, num_iters=10) if algo == "pr" else pipe.run(algo)
+                r = pipe.run(algo, num_iters=10, **kw) if algo == "pr" else pipe.run(algo, **kw)
                 wall = time.time() - t0
                 edges = r.edges_per_worker
                 total_work = float((r.stats.inner_iters_per_step * edges[None, :]).sum())
@@ -82,8 +93,8 @@ def validate(results):
     return wins, cases
 
 
-def main(scale: float = 1.0, partitioners=PARTS):
-    res = run(scale, partitioners=partitioners)
+def main(scale: float = 1.0, partitioners=PARTS, compute_backend="xla", warmup=False):
+    res = run(scale, partitioners=partitioners, compute_backend=compute_backend, warmup=warmup)
     validate(res)
     return res
 

@@ -1,8 +1,16 @@
 #!/usr/bin/env bash
 # Tier-1 verification: the repo's canonical test command.
 #
-#   scripts/ci.sh            # full tier-1 run
-#   scripts/ci.sh -k api     # extra pytest args pass through
+#   scripts/ci.sh            # full tier-1 run + backend-parity suite
+#   scripts/ci.sh -k api     # extra pytest args pass through (parity suite skipped)
 set -euo pipefail
 cd "$(dirname "$0")/.."
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+python -m pytest -x -q "$@"
+if [ "$#" -gt 0 ]; then
+  # Extra args may have filtered out the backend-parity suite (xla vs ref
+  # vs pallas-interpret engine + chunked EBG bitset) — always run it, so a
+  # backend regression fails loudly in every invocation mode. The no-arg
+  # run above already includes it.
+  python -m pytest -q tests/test_backends.py
+fi

@@ -13,12 +13,14 @@ import the registry at definition time to self-register, and the
 pipeline imports `repro.core` — the lazy hop breaks that cycle.
 """
 from repro.api.config import (
+    COMPUTE_BACKENDS,
     EBGConfig,
     EBVConfig,
     HashConfig,
     MetisLikeConfig,
     NEConfig,
     PartitionerConfig,
+    check_compute_backend,
 )
 from repro.api.registry import (
     Partitioner,
@@ -34,6 +36,8 @@ from repro.api.registry import (
 _LAZY = ("GraphPipeline", "PipelineRun", "SubgraphSpec", "LoweredBSP")
 
 __all__ = [
+    "COMPUTE_BACKENDS",
+    "check_compute_backend",
     "EBGConfig",
     "EBVConfig",
     "HashConfig",

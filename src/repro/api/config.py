@@ -17,6 +17,22 @@ def _require(cond: bool, msg: str) -> None:
         raise ValueError(msg)
 
 
+# Engine/partitioner hot-path implementations: "xla" = generic XLA segment
+# ops (the historical path), "ref" = the pure-jnp kernel oracles in
+# repro.kernels.ref, "pallas" = the Pallas TPU kernels (interpreted
+# off-TPU). Canonical definition lives here so the registry, configs, and
+# CLI drivers can validate names without importing jax.
+COMPUTE_BACKENDS = ("xla", "ref", "pallas")
+
+
+def check_compute_backend(backend) -> str:
+    _require(
+        backend in COMPUTE_BACKENDS,
+        f"compute_backend must be one of {COMPUTE_BACKENDS}, got {backend!r}",
+    )
+    return backend
+
+
 def _validate_seed(seed) -> None:
     _require(
         isinstance(seed, int) and not isinstance(seed, bool) and seed >= 0,
@@ -49,13 +65,16 @@ class EBGConfig(PartitionerConfig):
     alpha/beta weight the edge/vertex balance terms of the evaluation
     function; `block` sizes the chunked variant's vectorized score block
     (ignored by the unblocked scan); `sort_edges` toggles the §IV-C
-    degree-sum edge ordering.
+    degree-sum edge ordering; `compute_backend` selects the chunked
+    variant's score-phase implementation ("xla" dense bool membership,
+    "ref"/"pallas" packed-bitset membership via repro.kernels).
     """
 
     alpha: float = 1.0
     beta: float = 1.0
     block: int = 256
     sort_edges: bool = True
+    compute_backend: str = "xla"
 
     def validate(self) -> None:
         _require(
@@ -71,6 +90,7 @@ class EBGConfig(PartitionerConfig):
             f"block must be a positive int, got {self.block!r}",
         )
         _require(isinstance(self.sort_edges, bool), f"sort_edges must be a bool, got {self.sort_edges!r}")
+        check_compute_backend(self.compute_backend)
 
 
 # The paper calls the algorithm EBV; the repo's modules call it EBG.

@@ -27,7 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.api.config import PartitionerConfig
+from repro.api.config import PartitionerConfig, check_compute_backend
 from repro.api.registry import PartitionerSpec, check_num_parts, get_partitioner
 from repro.core.metrics import PartitionMetrics, partition_metrics
 from repro.core.types import Graph, PartitionResult
@@ -38,6 +38,7 @@ from repro.graph.engine import (
     SSSP,
     BSPStats,
     MinProgram,
+    check_int32_kernel_labels,
     init_cc,
     init_sssp,
     make_distributed_stepper,
@@ -299,16 +300,20 @@ class GraphPipeline:
         symmetrize: Optional[bool] = None,
         pad_multiple: Optional[int] = None,
         source: Optional[int] = None,
+        compute_backend: Optional[str] = None,
         **kw,
     ) -> "PipelineRun":
         """Execute `program` over the partitioned graph and collect stats.
 
         mode="sim" batches all workers on one device (tests/benchmarks);
         mode="dist" shard_maps one subgraph per device (pass mesh=...).
-        Extra kwargs flow to the engine (max_supersteps, inner_cap,
-        exchange_period, num_iters, ...).
+        compute_backend routes the engine hot paths ("xla" | "ref" |
+        "pallas"; default "xla"). Extra kwargs flow to the engine
+        (max_supersteps, inner_cap, exchange_period, num_iters, ...).
         """
         name, prog = _resolve_program(program)
+        if compute_backend is not None:
+            kw["compute_backend"] = check_compute_backend(compute_backend)
         sub = self.subgraphs_for(**self._build_params_for(name, prog, symmetrize, pad_multiple))
         if mode == "sim":
             if name == "pr":
@@ -335,16 +340,19 @@ class GraphPipeline:
         num_supersteps: int = 30,
         inner_cap: int = 10_000,
         source: Optional[int] = None,
+        compute_backend: str = "xla",
     ) -> tuple[np.ndarray, BSPStats]:
         if prog is None:
             raise ValueError("mode='dist' supports min-semiring programs (cc/sssp) only")
+        check_int32_kernel_labels(prog, sub, compute_backend)
         axes = _normalize_axes(mesh, axes)
         ndev = int(np.prod([mesh.shape[a] for a in axes]))
         if ndev != sub.num_parts:
             raise ValueError(f"mesh axes {axes} span {ndev} devices but partition has {sub.num_parts} parts")
         arrays, statics = subgraphs_to_arrays(sub)
         stepper = make_distributed_stepper(
-            mesh, axes, prog, statics, num_supersteps=num_supersteps, inner_cap=inner_cap
+            mesh, axes, prog, statics, num_supersteps=num_supersteps, inner_cap=inner_cap,
+            compute_backend=compute_backend,
         )
         if name == "cc":
             init = init_cc(sub)
@@ -376,9 +384,11 @@ class GraphPipeline:
         inner_cap: int = 64,
         symmetrize: Optional[bool] = None,
         pad_multiple: Optional[int] = None,
+        compute_backend: str = "xla",
     ) -> LoweredBSP:
         """AOT-lower the distributed BSP stepper (abstract or concrete)."""
         name, prog = _resolve_program(program)
+        check_compute_backend(compute_backend)
         if prog is None:
             raise ValueError("lowering supports min-semiring programs (cc/sssp) only")
         axes = _normalize_axes(mesh, axes)
@@ -390,7 +400,8 @@ class GraphPipeline:
             )
         arrays, statics = spec.array_specs()
         stepper = make_distributed_stepper(
-            mesh, axes, prog, statics, num_supersteps=num_supersteps, inner_cap=inner_cap
+            mesh, axes, prog, statics, num_supersteps=num_supersteps, inner_cap=inner_cap,
+            compute_backend=compute_backend,
         )
         spec2 = P(axes, None)
         spec3 = P(axes, None, None)

@@ -22,7 +22,7 @@ import inspect
 from collections.abc import Mapping
 from typing import Callable, Optional, Protocol, runtime_checkable
 
-from repro.api.config import PartitionerConfig
+from repro.api.config import PartitionerConfig, check_compute_backend
 
 
 def check_num_parts(num_parts) -> None:
@@ -49,6 +49,7 @@ class PartitionerSpec:
     chunked: bool = False  # processes edges in vectorized blocks
     jit_compatible: bool = False  # core loop runs under jax.jit
     benchmark_default: bool = True  # included in the paper benchmark suite
+    compute_backends: tuple = ("xla",)  # hot-path impls the algorithm accepts
     description: str = ""
 
     @property
@@ -108,6 +109,7 @@ def register_partitioner(
     chunked: bool = False,
     jit_compatible: bool = False,
     benchmark_default: bool = True,
+    compute_backends: tuple = ("xla",),
     description: str = "",
 ):
     """Decorator: register `fn` under `name`. Returns `fn` unchanged, so
@@ -120,6 +122,8 @@ def register_partitioner(
         desc = description
         if not desc and fn.__doc__:
             desc = fn.__doc__.strip().splitlines()[0]
+        for b in compute_backends:
+            check_compute_backend(b)
         _REGISTRY[name] = PartitionerSpec(
             name=name,
             fn=fn,
@@ -128,6 +132,7 @@ def register_partitioner(
             chunked=chunked,
             jit_compatible=jit_compatible,
             benchmark_default=benchmark_default,
+            compute_backends=tuple(compute_backends),
             description=desc,
         )
         return fn

@@ -32,8 +32,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.api.config import check_compute_backend
 from repro.compat import shard_map_compat
+from repro.core.metrics import max_mean_ratio
 from repro.graph.build import SubgraphSet
+from repro.kernels import ops
 
 INF_F32 = jnp.float32(3.0e38)
 INF_I32 = jnp.int32(2**31 - 1)
@@ -53,8 +56,9 @@ class BSPStats:
 
     @property
     def max_mean(self) -> float:
-        m = self.messages_per_worker.astype(np.float64)
-        return float(m.max() / m.mean()) if m.mean() > 0 else 1.0
+        """Paper Table-V max/mean message balance (single definition in
+        repro.core.metrics)."""
+        return max_mean_ratio(self.messages_per_worker)
 
 
 # ---------------------------------------------------------------- helpers
@@ -109,47 +113,98 @@ CC = MinProgram("cc", use_weight=False, bidirectional=True, dtype="int32")
 SSSP = MinProgram("sssp", use_weight=True, bidirectional=False, dtype="float32")
 
 
-def _local_min_fixpoint(prog: MinProgram, sub: SubgraphSet, val: jax.Array, inner_cap: int):
-    """Batched local fixpoint. val: [p, max_v+1] (last slot = dump)."""
+def _relax_xla(prog: MinProgram, sub: SubgraphSet, v: jax.Array) -> jax.Array:
+    """One local relaxation sweep via generic XLA segment ops."""
     nseg = sub.max_v + 1
     inf = prog.inf
+    data = jnp.take_along_axis(v, sub.lsrc, axis=1)
+    if prog.use_weight:
+        data = data + sub.weight.astype(v.dtype)
+    data = jnp.where(sub.edge_mask, data, inf)
+    cand = jax.vmap(lambda d, s: _segment_min(d, s, nseg, inf))(data, sub.ldst)
+    new = jnp.minimum(v, cand)
+    if prog.bidirectional:
+        data2 = jnp.take_along_axis(v, sub.ldst_s, axis=1)
+        if prog.use_weight:
+            data2 = data2 + sub.weight_s.astype(v.dtype)
+        data2 = jnp.where(sub.edge_mask_s, data2, inf)
+        cand2 = jax.vmap(lambda d, s: _segment_min(d, s, nseg, inf))(data2, sub.lsrc_s)
+        new = jnp.minimum(new, cand2)
+    return new
+
+
+def _make_relax_kernel(
+    prog: MinProgram, sub: SubgraphSet, backend: str, interpret: bool | None = None
+):
+    """One local relaxation sweep via repro.kernels min-plus segment reduce,
+    vmapped over the worker axis. Operates on f32 values (see the INF
+    remapping in `_local_min_fixpoint`); padded edges carry the INF weight
+    identity, matching the kernels' convention. `interpret=None` lets ops
+    sniff the host backend; the distributed stepper passes the MESH
+    platform instead, so lowering for a TPU mesh from a CPU host bakes in
+    the compiled kernel, not the interpreter."""
+    nseg = sub.max_v + 1
+
+    def edge_w(weight, mask):
+        w = weight if prog.use_weight else jnp.zeros_like(weight)
+        return jnp.where(mask, w, INF_F32)
+
+    w_fwd = edge_w(sub.weight, sub.edge_mask)
+    w_bwd = edge_w(sub.weight_s, sub.edge_mask_s) if prog.bidirectional else None
+    op = jax.vmap(
+        functools.partial(ops.segment_min_plus, num_out=nseg, impl=backend, interpret=interpret),
+        in_axes=(0, 0, 0, 0),
+    )
 
     def relax(v):
-        data = jnp.take_along_axis(v, sub.lsrc, axis=1)
-        if prog.use_weight:
-            data = data + sub.weight.astype(v.dtype)
-        data = jnp.where(sub.edge_mask, data, inf)
-        cand = jax.vmap(lambda d, s: _segment_min(d, s, nseg, inf))(data, sub.ldst)
-        new = jnp.minimum(v, cand)
+        # segment_min_plus seeds the output with v, so `op` returns the
+        # fully relaxed vector (no extra jnp.minimum with v needed).
+        new = op(sub.lsrc, sub.ldst, w_fwd, v)
         if prog.bidirectional:
-            data2 = jnp.take_along_axis(v, sub.ldst_s, axis=1)
-            if prog.use_weight:
-                data2 = data2 + sub.weight_s.astype(v.dtype)
-            data2 = jnp.where(sub.edge_mask_s, data2, inf)
-            cand2 = jax.vmap(lambda d, s: _segment_min(d, s, nseg, inf))(data2, sub.lsrc_s)
-            new = jnp.minimum(new, cand2)
+            # Reverse direction: reduce into sources using the src-sorted
+            # edge copy (lsrc_s is the sorted/destination role here).
+            new = jnp.minimum(new, op(sub.ldst_s, sub.lsrc_s, w_bwd, v))
         return new
 
-    def cond(carry):
-        _, changed, it = carry
-        return jnp.any(changed) & (it < inner_cap)
+    return relax
 
-    def body(carry):
-        v, _, it = carry
-        new = relax(v)
-        ch = jnp.any(new != v, axis=1)  # per worker
-        return new, ch, it + 1
+
+def _local_min_fixpoint(
+    prog: MinProgram,
+    sub: SubgraphSet,
+    val: jax.Array,
+    inner_cap: int,
+    backend: str = "xla",
+    interpret: bool | None = None,
+):
+    """Batched local fixpoint. val: [p, max_v+1] (last slot = dump).
+
+    backend "xla" runs generic segment ops; "ref"/"pallas" route through
+    repro.kernels.ops (f32 min-plus). For int32 programs (CC) the kernel
+    path remaps INF_I32 <-> INF_F32 and runs the loop in f32 — exact only
+    for vertex labels below 2^24 (`run_min_bsp` enforces this; graphs
+    beyond it must use backend "xla").
+    """
+    if backend == "xla":
+        relax = functools.partial(_relax_xla, prog, sub)
+    else:
+        relax = _make_relax_kernel(prog, sub, backend, interpret)
+
+    to_f32 = backend != "xla" and prog.dtype == "int32"
+    v0 = jnp.where(val == INF_I32, INF_F32, val.astype(jnp.float32)) if to_f32 else val
 
     def body_count(carry):
         v, ch, it, iters = carry
         new = relax(v)
-        ch = jnp.any(new != v, axis=1)
+        ch = jnp.any(new != v, axis=1)  # per worker
         return new, ch, it + 1, iters + ch.astype(jnp.int32)
 
     p = val.shape[0]
-    carry = (val, jnp.ones((p,), bool), jnp.int32(0), jnp.zeros((p,), jnp.int32))
+    carry = (v0, jnp.ones((p,), bool), jnp.int32(0), jnp.zeros((p,), jnp.int32))
     carry = jax.lax.while_loop(lambda c: jnp.any(c[1]) & (c[2] < inner_cap), body_count, carry)
     new_val, _, _, iters = carry
+    if to_f32:
+        new_val = jnp.where(new_val >= INF_F32, INF_I32, new_val.astype(jnp.int32))
     return new_val, iters
 
 
@@ -161,6 +216,8 @@ def _min_superstep(
     inner_cap: int,
     do_exchange: bool = True,
     count_ref=None,
+    backend: str = "xla",
+    interpret: bool | None = None,
 ):
     """One BSP superstep. Returns (new_val, per-worker msg count, iters).
 
@@ -168,7 +225,7 @@ def _min_superstep(
     are counted against it (matters under bounded staleness).
     """
     start = val if count_ref is None else count_ref
-    val2, iters = _local_min_fixpoint(prog, sub, val, inner_cap)
+    val2, iters = _local_min_fixpoint(prog, sub, val, inner_cap, backend, interpret)
     if not do_exchange:  # bounded-staleness local step (straggler mitigation)
         return val2, jnp.zeros((val.shape[0],), jnp.int32), iters
 
@@ -199,17 +256,27 @@ def _min_superstep(
 # --------------------------------------------------------------- PageRank
 
 
-def _pr_superstep(sub: SubgraphSet, rank, exchange, damping: float, num_vertices: int):
+def _pr_superstep(
+    sub: SubgraphSet, rank, exchange, damping: float, num_vertices: int, backend: str = "xla"
+):
     """One PageRank (power-iteration) superstep."""
     p = rank.shape[0]
     nseg = sub.max_v + 1
     outdeg = jnp.concatenate([sub.out_degree, jnp.ones((p, 1), jnp.float32)], axis=1)
     share = jnp.where(outdeg > 0, rank / outdeg, 0.0)
-    data = jnp.take_along_axis(share, sub.lsrc, axis=1)
-    data = jnp.where(sub.edge_mask, data, 0.0)
-    partial = jax.vmap(
-        lambda d, s: jax.ops.segment_sum(d, s, num_segments=nseg, indices_are_sorted=True)
-    )(data, sub.ldst)
+    if backend == "xla":
+        data = jnp.take_along_axis(share, sub.lsrc, axis=1)
+        data = jnp.where(sub.edge_mask, data, 0.0)
+        partial = jax.vmap(
+            lambda d, s: jax.ops.segment_sum(d, s, num_segments=nseg, indices_are_sorted=True)
+        )(data, sub.ldst)
+    else:
+        # sum-times segment reduce: padded edges carry scale=0 (sum identity).
+        scale = sub.edge_mask.astype(jnp.float32)
+        partial = jax.vmap(
+            functools.partial(ops.segment_sum_scaled, num_out=nseg, impl=backend),
+            in_axes=(0, 0, 0, 0),
+        )(sub.lsrc, sub.ldst, scale, share)
 
     # mirror partials → master (sum), then master computes the new rank.
     S = _gather_rows(partial, sub.send_idx)
@@ -228,6 +295,25 @@ def _pr_superstep(sub: SubgraphSet, rank, exchange, damping: float, num_vertices
     new_rank = _scatter_set(new_rank, idx_masked, Rb)
     delta = jnp.abs(new_rank[:, : sub.max_v] - rank[:, : sub.max_v]).sum()
     return new_rank, msgs_fwd + msgs_bwd, delta
+
+
+def check_int32_kernel_labels(prog: MinProgram, sub: SubgraphSet, compute_backend: str) -> None:
+    """Refuse kernel backends for int32 programs with labels >= 2^24.
+
+    The kernel path runs the int32 min-semiring in f32, which is only exact
+    for labels below 2^24 — larger ids would merge distinct CC components
+    silently. Both the sim and distributed drivers call this before
+    launching.
+    """
+    check_compute_backend(compute_backend)
+    if compute_backend != "xla" and prog.dtype == "int32":
+        max_label = int(jnp.max(sub.gid))
+        if max_label >= 1 << 24:
+            raise ValueError(
+                f"compute_backend={compute_backend!r} runs int32 {prog.name} in f32, "
+                f"exact only for vertex ids < 2^24; graph has id {max_label} — "
+                "use compute_backend='xla'"
+            )
 
 
 # ------------------------------------------------------------ entry points
@@ -251,20 +337,20 @@ def init_sssp(sub: SubgraphSet, source: int) -> jax.Array:
 
 def init_pr(sub: SubgraphSet, num_vertices: int) -> jax.Array:
     p = sub.gid.shape[0]
-    val = jnp.where(sub.is_master, 1.0 / num_vertices, 0.0).astype(jnp.float32)
-    # mirrors start with the same global value (broadcast of init).
+    # Mirrors start with the same 1/N as masters (broadcast of the init) —
+    # every present vertex replica holds the global initial rank.
     val = jnp.where(sub.vmask, 1.0 / num_vertices, 0.0).astype(jnp.float32)
     return jnp.concatenate([val, jnp.zeros((p, 1), jnp.float32)], axis=1)
 
 
-@functools.partial(jax.jit, static_argnames=("prog", "inner_cap", "do_exchange"))
-def _jit_min_superstep_sim(prog, sub, val, inner_cap, do_exchange, count_ref):
-    return _min_superstep(prog, sub, val, _sim_exchange, inner_cap, do_exchange, count_ref)
+@functools.partial(jax.jit, static_argnames=("prog", "inner_cap", "do_exchange", "backend"))
+def _jit_min_superstep_sim(prog, sub, val, inner_cap, do_exchange, count_ref, backend="xla"):
+    return _min_superstep(prog, sub, val, _sim_exchange, inner_cap, do_exchange, count_ref, backend)
 
 
-@functools.partial(jax.jit, static_argnames=("damping", "num_vertices"))
-def _jit_pr_superstep_sim(sub, rank, damping, num_vertices):
-    return _pr_superstep(sub, rank, _sim_exchange, damping, num_vertices)
+@functools.partial(jax.jit, static_argnames=("damping", "num_vertices", "backend"))
+def _jit_pr_superstep_sim(sub, rank, damping, num_vertices, backend="xla"):
+    return _pr_superstep(sub, rank, _sim_exchange, damping, num_vertices, backend)
 
 
 def run_min_bsp(
@@ -275,8 +361,15 @@ def run_min_bsp(
     max_supersteps: int = 200,
     inner_cap: int = 10_000,
     exchange_period: int = 1,
+    compute_backend: str = "xla",
 ) -> tuple[jax.Array, BSPStats]:
-    """Simulation-mode driver for CC/SSSP. exchange_period>1 = bounded staleness."""
+    """Simulation-mode driver for CC/SSSP. exchange_period>1 = bounded staleness.
+
+    compute_backend selects the local-relaxation implementation (see
+    repro.api.config.COMPUTE_BACKENDS); all backends converge to the same
+    fixpoint.
+    """
+    check_int32_kernel_labels(prog, sub, compute_backend)
     val = init_val
     msg_steps = []
     iters_steps = []
@@ -290,7 +383,7 @@ def run_min_bsp(
         do_exchange = (k % exchange_period) == exchange_period - 1
         before = val
         val, msgs, iters = _jit_min_superstep_sim(
-            prog, sub, val, inner_cap, do_exchange, last_exchanged
+            prog, sub, val, inner_cap, do_exchange, last_exchanged, compute_backend
         )
         if do_exchange:
             last_exchanged = val
@@ -320,7 +413,9 @@ def run_pagerank(
     damping: float = 0.85,
     num_iters: int = 20,
     tol: float = 0.0,
+    compute_backend: str = "xla",
 ) -> tuple[jax.Array, BSPStats]:
+    check_compute_backend(compute_backend)
     rank = init_pr(sub, num_vertices)
     p = rank.shape[0]
     msgs_total = np.zeros((p,), np.int64)
@@ -328,7 +423,7 @@ def run_pagerank(
     edges = np.asarray(sub.edge_mask.sum(axis=1))
     steps = 0
     for _ in range(num_iters):
-        rank, msgs, delta = _jit_pr_superstep_sim(sub, rank, damping, num_vertices)
+        rank, msgs, delta = _jit_pr_superstep_sim(sub, rank, damping, num_vertices, compute_backend)
         steps += 1
         m = np.asarray(msgs, np.int64)
         msgs_total += m
@@ -370,6 +465,7 @@ def make_distributed_stepper(
     *,
     num_supersteps: int,
     inner_cap: int,
+    compute_backend: str = "xla",
 ):
     """Builds a shard_map'd BSP runner: subgraphs sharded 1:1 over `axes`.
 
@@ -379,6 +475,15 @@ def make_distributed_stepper(
     Takes the subgraph tensors as a dict (see `subgraphs_to_arrays`) so the
     sharding specs form a clean pytree.
     """
+    check_compute_backend(compute_backend)
+    # Pallas interpret vs compiled is keyed off the MESH platform, not the
+    # host process backend: AOT-lowering for a TPU mesh from a CPU host must
+    # bake in the compiled kernel, not the interpreter.
+    try:
+        mesh_platform = mesh.devices.reshape(-1)[0].platform
+    except AttributeError:  # abstract/mock meshes: fall back to the host sniff
+        mesh_platform = None
+    interpret = None if mesh_platform is None else mesh_platform != "tpu"
     axis_tuple = axes if isinstance(axes, tuple) else (axes,)
     spec3 = P(axis_tuple, None, None)
     spec2 = P(axis_tuple, None)
@@ -394,7 +499,10 @@ def make_distributed_stepper(
 
         def body(carry, _):
             v, msgs = carry
-            v, m, _ = _min_superstep(prog, sub, v, a2a_exchange, inner_cap)
+            v, m, _ = _min_superstep(
+                prog, sub, v, a2a_exchange, inner_cap,
+                backend=compute_backend, interpret=interpret,
+            )
             return (v, msgs + m), None
 
         (val_out, msgs), _ = jax.lax.scan(

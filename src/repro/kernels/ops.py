@@ -1,9 +1,16 @@
 """Public jit'd wrappers for the Pallas kernels with CPU-oracle dispatch.
 
-On the CPU container the kernels run under interpret=True only in the test
-sweeps (slow but exact); production entry points default to the pure-jnp
-oracle on CPU and the Pallas path on TPU. Callers can force either with
-`impl=`.
+On the CPU container the kernels default to the pure-jnp oracle; on TPU the
+production entry points default to the compiled Pallas path. Callers can
+force either with `impl=`, and — independently — force interpret vs
+compiled Pallas with `interpret=` (e.g. `impl="pallas", interpret=True`
+runs the real kernel under the interpreter on any backend, which is how
+the engine's `compute_backend="pallas"` stays testable off-TPU).
+
+These wrappers also own the block-padding convention: edge streams are
+padded to a multiple of `block_e` with identity-weight no-op edges, so
+callers (the BSP engine pads to `pad_multiple`, not to `block_e`) never
+have to know the kernels' grid granularity.
 """
 from __future__ import annotations
 
@@ -12,58 +19,114 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.api.config import COMPUTE_BACKENDS, check_compute_backend  # noqa: F401  (re-exported seam)
 from repro.kernels import ref
 from repro.kernels.decode_attn import decode_attention_pallas
 from repro.kernels.ebg_score import ebg_membership_pallas
 from repro.kernels.segment_reduce import segment_reduce_pallas
+
+IMPLS = ("ref", "pallas")
 
 
 def _default_impl() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "ref"
 
 
-def segment_min_plus(lsrc, ldst, weight, val, *, num_out: int, impl: str | None = None, block_e: int = 512):
+def _resolve_impl(impl: str | None, interpret: bool | None) -> tuple[str, bool]:
+    """The single place backend sniffing happens.
+
+    impl=None  -> pallas on TPU, pure-jnp oracle elsewhere.
+    interpret=None -> interpreter off-TPU, compiled kernel on TPU.
+    An explicit `interpret` always wins over the sniff, so callers can
+    force compiled Pallas off-TPU (or the interpreter on TPU).
+    """
+    impl = impl or _default_impl()
+    if impl not in IMPLS:
+        raise ValueError(f"impl must be one of {IMPLS} or None, got {impl!r}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return impl, interpret
+
+
+def _pad_to_block(lsrc, ldst, weight, block_e: int, pad_dst: int, identity: float):
+    """Pad an edge stream to a multiple of block_e with no-op edges.
+
+    Pad edges point at `pad_dst` (callers pass num_out-1, the engine's dump
+    slot, which also keeps dst-sortedness) and carry the reduction identity
+    as weight, so they contribute nothing. Returns the (possibly smaller)
+    block size actually used — a stream shorter than block_e becomes a
+    single exact-size block instead of mostly padding.
+    """
+    E = lsrc.shape[0]
+    block_e = max(min(block_e, E), 1)
+    pad = (-E) % block_e
+    if pad:
+        lsrc = jnp.concatenate([lsrc, jnp.zeros((pad,), lsrc.dtype)])
+        ldst = jnp.concatenate([ldst, jnp.full((pad,), pad_dst, ldst.dtype)])
+        weight = jnp.concatenate([weight, jnp.full((pad,), identity, weight.dtype)])
+    return lsrc, ldst, weight, block_e
+
+
+def segment_min_plus(
+    lsrc, ldst, weight, val, *, num_out: int,
+    impl: str | None = None, block_e: int = 512, interpret: bool | None = None,
+):
     """out[d] = min(val[d], min_{e: dst=d} val[src_e] + w_e); dst-sorted edges.
 
     Padded edges must carry weight=INF (min identity).
     """
-    impl = impl or _default_impl()
+    impl, interpret = _resolve_impl(impl, interpret)
     if impl == "ref":
         mask = weight < ref.INF
         return ref.segment_min_plus_ref(lsrc, ldst, weight, mask, val, num_out)
-    interpret = jax.default_backend() != "tpu"
+    lsrc, ldst, weight, block_e = _pad_to_block(
+        lsrc, ldst, weight, block_e, num_out - 1, float(ref.INF)
+    )
     return segment_reduce_pallas(
         lsrc, ldst, weight, val, num_out=num_out, block_e=block_e, op="min", interpret=interpret
     )
 
 
-def segment_sum_scaled(lsrc, ldst, scale, val, *, num_out: int, impl: str | None = None, block_e: int = 512):
+def segment_sum_scaled(
+    lsrc, ldst, scale, val, *, num_out: int,
+    impl: str | None = None, block_e: int = 512, interpret: bool | None = None,
+):
     """out[d] = sum_{e: dst=d} val[src_e] * scale_e; padded edges scale=0."""
-    impl = impl or _default_impl()
+    impl, interpret = _resolve_impl(impl, interpret)
     if impl == "ref":
         mask = scale != 0.0
         return ref.segment_sum_ref(lsrc, ldst, scale, mask, val, num_out)
-    interpret = jax.default_backend() != "tpu"
+    lsrc, ldst, scale, block_e = _pad_to_block(lsrc, ldst, scale, block_e, num_out - 1, 0.0)
     return segment_reduce_pallas(
         lsrc, ldst, scale, val, num_out=num_out, block_e=block_e, op="sum", interpret=interpret
     )
 
 
-def ebg_membership(keep_bits, u, v, *, impl: str | None = None, block_e: int = 512):
+def ebg_membership(
+    keep_bits, u, v, *, impl: str | None = None, block_e: int = 512, interpret: bool | None = None,
+):
     """memb[i,b] = #endpoints of edge b absent from keep[i] (packed bitset)."""
-    impl = impl or _default_impl()
+    impl, interpret = _resolve_impl(impl, interpret)
     if impl == "ref":
         return ref.ebg_membership_ref(keep_bits, u, v)
-    interpret = jax.default_backend() != "tpu"
-    return ebg_membership_pallas(keep_bits, u, v, block_e=block_e, interpret=interpret)
+    E = u.shape[0]
+    block_e = max(min(block_e, E), 1)
+    pad = (-E) % block_e
+    if pad:
+        u = jnp.concatenate([u, jnp.zeros((pad,), u.dtype)])
+        v = jnp.concatenate([v, jnp.zeros((pad,), v.dtype)])
+    out = ebg_membership_pallas(keep_bits, u, v, block_e=block_e, interpret=interpret)
+    return out[:, :E] if pad else out
 
 
-def decode_attention(q, k, v, *, softcap: float = 0.0, impl: str | None = None, block_s: int = 512):
+def decode_attention(
+    q, k, v, *, softcap: float = 0.0,
+    impl: str | None = None, block_s: int = 512, interpret: bool | None = None,
+):
     """Single-token GQA decode attention over a KV cache."""
-    impl = impl or _default_impl()
+    impl, interpret = _resolve_impl(impl, interpret)
     if impl == "ref":
         return ref.decode_attention_ref(q, k, v, softcap=softcap)
-    interpret = jax.default_backend() != "tpu"
     return decode_attention_pallas(q, k, v, softcap=softcap, block_s=block_s, interpret=interpret)
 
 

@@ -23,12 +23,19 @@ def friendster_spec(p: int, max_v: int = 1 << 20, max_e: int = 8 << 20, max_msg:
     return SubgraphSpec(num_parts=p, max_v=max_v, max_e=max_e, max_msg=max_msg)
 
 
-def run_graph_dryrun(*, multi_pod: bool = False, num_supersteps: int = 4, inner_cap: int = 64):
+def run_graph_dryrun(
+    *,
+    multi_pod: bool = False,
+    num_supersteps: int = 4,
+    inner_cap: int = 64,
+    compute_backend: str = "xla",
+):
     mesh = make_production_mesh(multi_pod=multi_pod)
     axes = tuple(mesh.axis_names)  # subgraphs over ALL axes: p == #chips
     p = len(mesh.devices.reshape(-1))
     low = GraphPipeline.from_spec(friendster_spec(p)).lower(
-        mesh=mesh, axes=axes, program=CC, num_supersteps=num_supersteps, inner_cap=inner_cap
+        mesh=mesh, axes=axes, program=CC, num_supersteps=num_supersteps, inner_cap=inner_cap,
+        compute_backend=compute_backend,
     )
     mem = low.compiled.memory_analysis()
     cost = cost_analysis_compat(low.compiled)
@@ -38,6 +45,7 @@ def run_graph_dryrun(*, multi_pod: bool = False, num_supersteps: int = 4, inner_
     terms = roofline_terms(flops, hbm, coll.total_link_bytes)
     return dict(
         arch="graph_bsp_cc",
+        compute_backend=compute_backend,
         shape=f"p{p}_friendster_scale",
         mesh="2x16x16" if multi_pod else "16x16",
         chips=p,
