@@ -28,10 +28,10 @@ def simulated_runtime(stats, edges_per_worker, t_edge: float) -> float:
     """BSP parallel-time model from per-worker per-superstep work counts."""
     iters = stats.inner_iters_per_step  # [steps, p]
     comp = iters * edges_per_worker[None, :] * t_edge
-    # messages per worker per step are not retained per-step; approximate
-    # with the per-worker totals spread over steps proportionally to comp.
-    msg_share = stats.messages_per_worker / max(1, stats.messages_per_worker.sum())
-    msg_per_step = stats.messages_per_step[:, None] * msg_share[None, :]
+    # The drivers record the real [steps, p] message matrix on-device, so
+    # the per-step communication straggler is exact — no proportional-spread
+    # approximation of per-worker totals.
+    msg_per_step = stats.messages_per_step_worker  # [steps, p]
     per_step = comp.max(axis=1) + (msg_per_step * T_MSG).max(axis=1)
     return float(per_step.sum())
 
@@ -48,17 +48,20 @@ def run(scale: float = 1.0, algos=("cc", "pr", "sssp"), partitioners=PARTS,
             for name in partitioners:
                 pipe = get_pipeline(key, scale, name, p).prepare(algo)
                 kw = dict(compute_backend=compute_backend)
+                run_once = (
+                    (lambda: pipe.run(algo, num_iters=10, **kw))
+                    if algo == "pr"
+                    else (lambda: pipe.run(algo, **kw))
+                )
                 if warmup:
-                    # Compile the backend's jitted superstep outside the
-                    # timer (one step suffices — the compile is keyed on the
-                    # static args, not the step count), so backend A/B walls
-                    # compare hot paths, not compiles.
-                    if algo == "pr":
-                        pipe.run(algo, num_iters=1, **kw)
-                    else:
-                        pipe.run(algo, max_supersteps=1, **kw)
+                    # Compile outside the timer with the EXACT call the
+                    # timer makes: the fused driver's executable is keyed on
+                    # max_supersteps/num_iters (they size the on-device stat
+                    # buffers), so a reduced-step warmup would compile a
+                    # different program and leave the compile in the wall.
+                    run_once()
                 t0 = time.time()
-                r = pipe.run(algo, num_iters=10, **kw) if algo == "pr" else pipe.run(algo, **kw)
+                r = run_once()
                 wall = time.time() - t0
                 edges = r.edges_per_worker
                 total_work = float((r.stats.inner_iters_per_step * edges[None, :]).sum())

@@ -13,4 +13,9 @@ if [ "$#" -gt 0 ]; then
   # backend regression fails loudly in every invocation mode. The no-arg
   # run above already includes it.
   python -m pytest -q tests/test_backends.py
+else
+  # Benchmark smoke: partition -> build -> engine at p=32, emitting
+  # BENCH_pipeline.json (partition/build walls, supersteps/s, messages,
+  # host-vs-fused driver comparison) so the perf trajectory is tracked.
+  python -m benchmarks.pipeline_smoke
 fi

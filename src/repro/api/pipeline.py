@@ -38,6 +38,7 @@ from repro.graph.engine import (
     SSSP,
     BSPStats,
     MinProgram,
+    check_driver,
     check_int32_kernel_labels,
     init_cc,
     init_sssp,
@@ -301,6 +302,7 @@ class GraphPipeline:
         pad_multiple: Optional[int] = None,
         source: Optional[int] = None,
         compute_backend: Optional[str] = None,
+        driver: Optional[str] = None,
         **kw,
     ) -> "PipelineRun":
         """Execute `program` over the partitioned graph and collect stats.
@@ -308,12 +310,23 @@ class GraphPipeline:
         mode="sim" batches all workers on one device (tests/benchmarks);
         mode="dist" shard_maps one subgraph per device (pass mesh=...).
         compute_backend routes the engine hot paths ("xla" | "ref" |
-        "pallas"; default "xla"). Extra kwargs flow to the engine
-        (max_supersteps, inner_cap, exchange_period, num_iters, ...).
+        "pallas"; default "xla"); driver selects the sim step loop
+        ("fused" single-dispatch while_loop, the default, or "host" —
+        one dispatch per superstep, kept for A/B). Extra kwargs flow to
+        the engine (max_supersteps, inner_cap, exchange_period,
+        num_iters, ...).
         """
         name, prog = _resolve_program(program)
         if compute_backend is not None:
             kw["compute_backend"] = check_compute_backend(compute_backend)
+        if driver is not None:
+            check_driver(driver)
+            if mode != "sim":
+                raise ValueError(
+                    "driver= applies to mode='sim' only; mode='dist' always runs "
+                    "the fused while_loop stepper"
+                )
+            kw["driver"] = driver
         sub = self.subgraphs_for(**self._build_params_for(name, prog, symmetrize, pad_multiple))
         if mode == "sim":
             if name == "pr":
@@ -359,16 +372,17 @@ class GraphPipeline:
         else:
             init = init_sssp(sub, self.default_source() if source is None else int(source))
         with mesh:
-            val, msgs = jax.jit(stepper)(arrays, init)
-        m = np.asarray(msgs, np.int64)
-        # The fixed-length scan retains only per-worker totals; per-step
-        # series are empty in distributed stats.
+            val, msgs, steps, msgs_steps, iters_steps = jax.jit(stepper)(arrays, init)
+        steps = int(steps)
+        msgs_sw = np.asarray(msgs_steps, np.int64)[:steps]
+        iters_sw = np.asarray(iters_steps, np.int64)[:steps]
         stats = BSPStats(
-            supersteps=num_supersteps,
-            messages_per_worker=m,
-            messages_per_step=np.zeros((0,), np.int64),
+            supersteps=steps,
+            messages_per_worker=np.asarray(msgs, np.int64),
+            messages_per_step=msgs_sw.sum(axis=1),
             comp_work_per_worker=np.zeros((sub.num_parts,), np.int64),
-            inner_iters_per_step=np.zeros((0, sub.num_parts), np.int64),
+            inner_iters_per_step=iters_sw,
+            messages_per_step_worker=msgs_sw,
         )
         return np.asarray(val[:, :-1]), stats
 
@@ -386,7 +400,14 @@ class GraphPipeline:
         pad_multiple: Optional[int] = None,
         compute_backend: str = "xla",
     ) -> LoweredBSP:
-        """AOT-lower the distributed BSP stepper (abstract or concrete)."""
+        """AOT-lower the distributed BSP stepper (abstract or concrete).
+
+        Kernel backends ("ref"/"pallas") run int32 programs (CC) through
+        f32 — exact only for vertex ids below 2^24. Concrete pipelines are
+        checked here; an abstract (from_spec) pipeline has no labels to
+        check, so the CALLER must enforce the <2^24 precondition on the
+        arrays eventually fed to the compiled stepper.
+        """
         name, prog = _resolve_program(program)
         check_compute_backend(compute_backend)
         if prog is None:
@@ -395,9 +416,9 @@ class GraphPipeline:
         if self._spec is not None:
             spec = self._spec
         else:
-            spec = SubgraphSpec.of(
-                self.subgraphs_for(**self._build_params_for(name, prog, symmetrize, pad_multiple))
-            )
+            sub = self.subgraphs_for(**self._build_params_for(name, prog, symmetrize, pad_multiple))
+            check_int32_kernel_labels(prog, sub, compute_backend)
+            spec = SubgraphSpec.of(sub)
         arrays, statics = spec.array_specs()
         stepper = make_distributed_stepper(
             mesh, axes, prog, statics, num_supersteps=num_supersteps, inner_cap=inner_cap,

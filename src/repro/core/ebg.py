@@ -163,41 +163,20 @@ def _ebg_chunked(
     else:
         # Packed uint32 bitset membership (32x smaller than the dense bool
         # table: p=32, V=1M -> 4 MB, VMEM-resident for the Pallas kernel).
-        # The score phase evaluates the per-block membership term via
-        # repro.kernels ebg_membership; the sequential balance-commit loop
-        # is byte-for-byte the same arithmetic as the dense path (memb[i,j]
-        # == miss_u[i,j] + miss_v[i,j]), so assignments are identical.
+        # The whole block — membership score, argmin, exact balance commit,
+        # bitset update — runs inside one fused ops.ebg_commit_block call
+        # (ref oracle or Pallas kernel); assignments stay identical to the
+        # dense path because membership is pinned to block-start state and
+        # the commit arithmetic is term-for-term the same.
         vw = (num_vertices + 31) // 32
         keep0_state = jnp.zeros((p, vw), dtype=jnp.uint32)
 
         def step(state, uv_block):
             keep_bits, e_count, v_count = state
             ub, vb, valb = uv_block  # [B]
-            # Membership against block-start keep, evaluated by the kernel.
-            memb = ops.ebg_membership(keep_bits, ub, vb, impl=backend, block_e=block)
-
-            def body(j, carry):
-                e_c, v_c, kb, parts = carry
-                score = memb[:, j] + alpha * e_c * inv_e + beta * v_c * inv_v
-                i = jnp.argmin(score).astype(jnp.int32)
-                live = valb[j].astype(jnp.float32)
-                e_c = e_c.at[i].add(live)
-                v_c = v_c.at[i].add(live * memb[i, j])
-                # Set both endpoint bits for the winner. Nothing in this
-                # block reads kb (memb is pinned to block-start state), so
-                # committing bits in-loop equals the dense path's post-loop
-                # scatter. Pad edges route to OOB row p -> dropped.
-                row = jnp.where(valb[j], i, p)
-                u, v = ub[j], vb[j]
-                bit_u = jnp.uint32(1) << (u & 31).astype(jnp.uint32)
-                kb = kb.at[row, u >> 5].set(kb[i, u >> 5] | bit_u, mode="drop")
-                bit_v = jnp.uint32(1) << (v & 31).astype(jnp.uint32)
-                kb = kb.at[row, v >> 5].set(kb[i, v >> 5] | bit_v, mode="drop")
-                return e_c, v_c, kb, parts.at[j].set(jnp.where(valb[j], i, p))
-
-            e_count, v_count, keep_bits, parts = jax.lax.fori_loop(
-                0, ub.shape[0], body,
-                (e_count, v_count, keep_bits, jnp.zeros((ub.shape[0],), jnp.int32)),
+            keep_bits, e_count, v_count, parts = ops.ebg_commit_block(
+                keep_bits, e_count, v_count, ub, vb, valb,
+                alpha=alpha, beta=beta, inv_e=inv_e, inv_v=inv_v, impl=backend,
             )
             return (keep_bits, e_count, v_count), parts
 

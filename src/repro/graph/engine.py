@@ -23,9 +23,9 @@ fixpoint.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
-from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +41,23 @@ from repro.kernels import ops
 INF_F32 = jnp.float32(3.0e38)
 INF_I32 = jnp.int32(2**31 - 1)
 
+# Simulation-mode driver implementations. "fused" runs the whole BSP loop as
+# one jitted lax.while_loop program (one dispatch, one host sync per run);
+# "host" runs one jitted superstep per Python iteration (kept for A/B and as
+# the readable reference of the loop semantics).
+DRIVERS = ("fused", "host")
+
+# Device-program dispatch accounting for the sim drivers: keys "fused" /
+# "host", incremented once per jitted call. tests/test_drivers.py pins the
+# fused drivers to exactly one dispatch per run with this counter.
+DISPATCH_COUNTS: collections.Counter = collections.Counter()
+
+
+def check_driver(driver) -> str:
+    if driver not in DRIVERS:
+        raise ValueError(f"driver must be one of {DRIVERS}, got {driver!r}")
+    return driver
+
 
 @dataclasses.dataclass
 class BSPStats:
@@ -49,6 +66,11 @@ class BSPStats:
     messages_per_step: np.ndarray  # [steps]
     comp_work_per_worker: np.ndarray  # [p] edge-relaxation work proxy
     inner_iters_per_step: np.ndarray  # [steps, p]
+    # Full per-step per-worker message matrix [steps, p] — what the BSP cost
+    # model in benchmarks/runtime.py consumes. messages_per_worker and
+    # messages_per_step above are its marginals, kept for existing call
+    # sites; every driver populates all three.
+    messages_per_step_worker: np.ndarray
 
     @property
     def total_messages(self) -> int:
@@ -88,7 +110,7 @@ def _scatter_set(val: jax.Array, idx: jax.Array, upd: jax.Array) -> jax.Array:
     return val.at[rows, idx.reshape(p, -1)].set(upd.reshape(p, -1))
 
 
-def _segment_min(data, seg, num_segments, inf):
+def _segment_min(data, seg, num_segments):
     return jax.ops.segment_min(data, seg, num_segments=num_segments, indices_are_sorted=True)
 
 
@@ -121,14 +143,14 @@ def _relax_xla(prog: MinProgram, sub: SubgraphSet, v: jax.Array) -> jax.Array:
     if prog.use_weight:
         data = data + sub.weight.astype(v.dtype)
     data = jnp.where(sub.edge_mask, data, inf)
-    cand = jax.vmap(lambda d, s: _segment_min(d, s, nseg, inf))(data, sub.ldst)
+    cand = jax.vmap(lambda d, s: _segment_min(d, s, nseg))(data, sub.ldst)
     new = jnp.minimum(v, cand)
     if prog.bidirectional:
         data2 = jnp.take_along_axis(v, sub.ldst_s, axis=1)
         if prog.use_weight:
             data2 = data2 + sub.weight_s.astype(v.dtype)
         data2 = jnp.where(sub.edge_mask_s, data2, inf)
-        cand2 = jax.vmap(lambda d, s: _segment_min(d, s, nseg, inf))(data2, sub.lsrc_s)
+        cand2 = jax.vmap(lambda d, s: _segment_min(d, s, nseg))(data2, sub.lsrc_s)
         new = jnp.minimum(new, cand2)
     return new
 
@@ -353,6 +375,98 @@ def _jit_pr_superstep_sim(sub, rank, damping, num_vertices, backend="xla"):
     return _pr_superstep(sub, rank, _sim_exchange, damping, num_vertices, backend)
 
 
+# ------------------------------------------------------ fused sim drivers
+#
+# The host drivers below dispatch one device program per superstep and sync
+# after each one (np.asarray of the message counts, the convergence bool).
+# The fused drivers run the WHOLE BSP loop inside one jitted lax.while_loop:
+# per-step stats land in preallocated [max_supersteps, p] on-device buffers,
+# convergence exits the loop inside the trace, the value carry is donated,
+# and the host syncs exactly once per run to fetch (steps, stats).
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("prog", "max_supersteps", "inner_cap", "exchange_period", "backend"),
+    donate_argnums=(1,),
+)
+def _fused_min_bsp(sub, val, *, prog, max_supersteps, inner_cap, exchange_period, backend):
+    p = val.shape[0]
+    msgs_buf = jnp.zeros((max_supersteps, p), jnp.int32)
+    iters_buf = jnp.zeros((max_supersteps, p), jnp.int32)
+
+    def cond(carry):
+        _, _, k, done, _, _ = carry
+        return ~done & (k < max_supersteps)
+
+    def body(carry):
+        v, last_ex, k, _, msgs_buf, iters_buf = carry
+        if exchange_period == 1:
+            # Static specialization of the common case: every step exchanges,
+            # so the trace needs no branch or last-exchange select.
+            v2, msgs, iters = _min_superstep(
+                prog, sub, v, _sim_exchange, inner_cap, True, last_ex, backend
+            )
+            converged = ~jnp.any(v2 != v)
+            last_ex = v2
+        else:
+            do_ex = (k % exchange_period) == (exchange_period - 1)
+            v2, msgs, iters = jax.lax.cond(
+                do_ex,
+                lambda v_, le: _min_superstep(prog, sub, v_, _sim_exchange, inner_cap, True, le, backend),
+                lambda v_, le: _min_superstep(prog, sub, v_, _sim_exchange, inner_cap, False, le, backend),
+                v, last_ex,
+            )
+            # Converged only when an exchange round produced no change
+            # anywhere (identical to the host driver's break condition).
+            converged = do_ex & ~jnp.any(v2 != v)
+            last_ex = jnp.where(do_ex, v2, last_ex)
+        return (v2, last_ex, k + 1, converged, msgs_buf.at[k].set(msgs), iters_buf.at[k].set(iters))
+
+    carry = (val, val, jnp.int32(0), jnp.bool_(False), msgs_buf, iters_buf)
+    val, _, steps, _, msgs_buf, iters_buf = jax.lax.while_loop(cond, body, carry)
+    # Edge counts ride along so the stats assembly needs no extra dispatch.
+    edges = jnp.sum(sub.edge_mask, axis=1, dtype=jnp.int32)
+    return val, steps, msgs_buf, iters_buf, edges
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("damping", "num_vertices", "num_iters", "tol", "backend"),
+    donate_argnums=(1,),
+)
+def _fused_pagerank(sub, rank, *, damping, num_vertices, num_iters, tol, backend):
+    p = rank.shape[0]
+    msgs_buf = jnp.zeros((num_iters, p), jnp.int32)
+
+    def cond(carry):
+        _, k, done, _ = carry
+        return ~done & (k < num_iters)
+
+    def body(carry):
+        r, k, _, msgs_buf = carry
+        r2, msgs, delta = _pr_superstep(sub, r, _sim_exchange, damping, num_vertices, backend)
+        done = (delta < tol) if tol else jnp.bool_(False)
+        return r2, k + 1, done, msgs_buf.at[k].set(msgs)
+
+    rank, steps, _, msgs_buf = jax.lax.while_loop(
+        cond, body, (rank, jnp.int32(0), jnp.bool_(False), msgs_buf)
+    )
+    edges = jnp.sum(sub.edge_mask, axis=1, dtype=jnp.int32)
+    return rank, steps, msgs_buf, edges
+
+
+def _min_stats(steps: int, msgs_sw: np.ndarray, iters_sw: np.ndarray, edges: np.ndarray) -> BSPStats:
+    return BSPStats(
+        supersteps=steps,
+        messages_per_worker=msgs_sw.sum(axis=0),
+        messages_per_step=msgs_sw.sum(axis=1),
+        comp_work_per_worker=(iters_sw * edges[None, :]).sum(axis=0),
+        inner_iters_per_step=iters_sw,
+        messages_per_step_worker=msgs_sw,
+    )
+
+
 def run_min_bsp(
     sub: SubgraphSet,
     prog: MinProgram,
@@ -362,21 +476,50 @@ def run_min_bsp(
     inner_cap: int = 10_000,
     exchange_period: int = 1,
     compute_backend: str = "xla",
+    driver: str = "fused",
 ) -> tuple[jax.Array, BSPStats]:
     """Simulation-mode driver for CC/SSSP. exchange_period>1 = bounded staleness.
 
     compute_backend selects the local-relaxation implementation (see
     repro.api.config.COMPUTE_BACKENDS); all backends converge to the same
-    fixpoint.
+    fixpoint. driver="fused" runs the whole loop as one device program;
+    driver="host" dispatches one superstep per Python iteration (identical
+    values and stats — tests/test_drivers.py pins the equivalence).
+
+    driver="fused" DONATES init_val to the device program (that is where
+    the fused loop's zero-copy value carry starts): on accelerators the
+    caller's buffer is consumed, so build a fresh init per run (as
+    repro.graph.algorithms does) rather than reusing one across calls.
     """
     check_int32_kernel_labels(prog, sub, compute_backend)
+    check_driver(driver)
+    p = init_val.shape[0]
+
+    if driver == "fused":
+        val, steps, msgs_buf, iters_buf, edges = _fused_min_bsp(
+            sub,
+            init_val,
+            prog=prog,
+            max_supersteps=max_supersteps,
+            inner_cap=inner_cap,
+            exchange_period=exchange_period,
+            backend=compute_backend,
+        )
+        DISPATCH_COUNTS["fused"] += 1
+        # The run's single host sync: one device_get for every stat buffer.
+        steps, msgs_sw, iters_sw, edges = jax.device_get((steps, msgs_buf, iters_buf, edges))
+        steps = int(steps)
+        return val, _min_stats(
+            steps,
+            msgs_sw[:steps].astype(np.int64),
+            iters_sw[:steps].astype(np.int64),
+            edges.astype(np.int64),
+        )
+
     val = init_val
     msg_steps = []
     iters_steps = []
-    p = val.shape[0]
-    msgs_total = np.zeros((p,), np.int64)
-    work = np.zeros((p,), np.int64)
-    edges = np.asarray(sub.edge_mask.sum(axis=1))
+    edges = np.asarray(sub.edge_mask.sum(axis=1), np.int64)
     steps = 0
     last_exchanged = val
     for k in range(max_supersteps):
@@ -385,25 +528,18 @@ def run_min_bsp(
         val, msgs, iters = _jit_min_superstep_sim(
             prog, sub, val, inner_cap, do_exchange, last_exchanged, compute_backend
         )
+        DISPATCH_COUNTS["host"] += 1
         if do_exchange:
             last_exchanged = val
         steps += 1
-        m = np.asarray(msgs, np.int64)
-        it = np.asarray(iters, np.int64)
-        msg_steps.append(m.sum())
-        iters_steps.append(it)
-        msgs_total += m
-        work += it * edges
+        msg_steps.append(np.asarray(msgs, np.int64))
+        iters_steps.append(np.asarray(iters, np.int64))
         # Converged only when an exchange round produced no change anywhere.
         if do_exchange and not bool(jnp.any(val != before)):
             break
-    return val, BSPStats(
-        supersteps=steps,
-        messages_per_worker=msgs_total,
-        messages_per_step=np.asarray(msg_steps),
-        comp_work_per_worker=work,
-        inner_iters_per_step=np.asarray(iters_steps),
-    )
+    msgs_sw = np.asarray(msg_steps).reshape(steps, p)
+    iters_sw = np.asarray(iters_steps).reshape(steps, p)
+    return val, _min_stats(steps, msgs_sw, iters_sw, edges)
 
 
 def run_pagerank(
@@ -414,28 +550,49 @@ def run_pagerank(
     num_iters: int = 20,
     tol: float = 0.0,
     compute_backend: str = "xla",
+    driver: str = "fused",
 ) -> tuple[jax.Array, BSPStats]:
     check_compute_backend(compute_backend)
+    check_driver(driver)
     rank = init_pr(sub, num_vertices)
     p = rank.shape[0]
-    msgs_total = np.zeros((p,), np.int64)
-    msg_steps = []
-    edges = np.asarray(sub.edge_mask.sum(axis=1))
-    steps = 0
-    for _ in range(num_iters):
-        rank, msgs, delta = _jit_pr_superstep_sim(sub, rank, damping, num_vertices, compute_backend)
-        steps += 1
-        m = np.asarray(msgs, np.int64)
-        msgs_total += m
-        msg_steps.append(m.sum())
-        if tol and float(delta) < tol:
-            break
+
+    if driver == "fused":
+        rank, steps, msgs_buf, edges = _fused_pagerank(
+            sub,
+            rank,
+            damping=damping,
+            num_vertices=num_vertices,
+            num_iters=num_iters,
+            tol=tol,
+            backend=compute_backend,
+        )
+        DISPATCH_COUNTS["fused"] += 1
+        steps, msgs_sw, edges = jax.device_get((steps, msgs_buf, edges))
+        steps = int(steps)
+        msgs_sw = msgs_sw[:steps].astype(np.int64)
+        edges = edges.astype(np.int64)
+    else:
+        msg_steps = []
+        edges = np.asarray(sub.edge_mask.sum(axis=1), np.int64)
+        steps = 0
+        for _ in range(num_iters):
+            rank, msgs, delta = _jit_pr_superstep_sim(
+                sub, rank, damping, num_vertices, compute_backend
+            )
+            DISPATCH_COUNTS["host"] += 1
+            steps += 1
+            msg_steps.append(np.asarray(msgs, np.int64))
+            if tol and float(delta) < tol:
+                break
+        msgs_sw = np.asarray(msg_steps).reshape(steps, p)
     return rank, BSPStats(
         supersteps=steps,
-        messages_per_worker=msgs_total,
-        messages_per_step=np.asarray(msg_steps),
+        messages_per_worker=msgs_sw.sum(axis=0),
+        messages_per_step=msgs_sw.sum(axis=1),
         comp_work_per_worker=edges * steps,
         inner_iters_per_step=np.ones((steps, p), np.int64),
+        messages_per_step_worker=msgs_sw,
     )
 
 
@@ -474,6 +631,12 @@ def make_distributed_stepper(
     the multi-pod dry-run lowers: p=512 subgraphs over (pod, data, model).
     Takes the subgraph tensors as a dict (see `subgraphs_to_arrays`) so the
     sharding specs form a clean pytree.
+
+    Like the fused sim driver, the step loop is a lax.while_loop that exits
+    as soon as a superstep changes nothing on any device (global flag via
+    psum) and records per-step message/inner-iteration stats in
+    [num_supersteps, local] device buffers. Returns
+    (val, msgs_total, steps, msgs_per_step, iters_per_step).
     """
     check_compute_backend(compute_backend)
     # Pallas interpret vs compiled is keyed off the MESH platform, not the
@@ -496,18 +659,33 @@ def make_distributed_stepper(
 
     def stepper(arrays: dict, val: jax.Array):
         sub = SubgraphSet(**arrays, **statics)
+        nloc = val.shape[0]  # subgraphs per device (1 on a fully sharded mesh)
+        msgs_buf = jnp.zeros((num_supersteps, nloc), jnp.int32)
+        iters_buf = jnp.zeros((num_supersteps, nloc), jnp.int32)
 
-        def body(carry, _):
-            v, msgs = carry
-            v, m, _ = _min_superstep(
+        def cond(carry):
+            _, k, done, _, _ = carry
+            return ~done & (k < num_supersteps)
+
+        def body(carry):
+            v, k, _, msgs_buf, iters_buf = carry
+            v2, m, it = _min_superstep(
                 prog, sub, v, a2a_exchange, inner_cap,
                 backend=compute_backend, interpret=interpret,
             )
-            return (v, msgs + m), None
+            # Convergence is global: psum the per-device change flag so every
+            # device takes the same trip count (collectives stay uniform).
+            changed = jax.lax.psum(jnp.any(v2 != v).astype(jnp.int32), axis_tuple)
+            return v2, k + 1, changed == 0, msgs_buf.at[k].set(m), iters_buf.at[k].set(it)
 
-        (val_out, msgs), _ = jax.lax.scan(
-            body, (val, jnp.zeros((val.shape[0],), jnp.int32)), None, length=num_supersteps
+        val_out, steps, _, msgs_buf, iters_buf = jax.lax.while_loop(
+            cond, body, (val, jnp.int32(0), jnp.bool_(False), msgs_buf, iters_buf)
         )
-        return val_out, msgs
+        return val_out, msgs_buf.sum(axis=0), steps, msgs_buf, iters_buf
 
-    return shard_map_compat(stepper, mesh=mesh, in_specs=in_specs, out_specs=(spec2, P(axis_tuple)))
+    return shard_map_compat(
+        stepper,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=(spec2, P(axis_tuple), P(), P(None, axis_tuple), P(None, axis_tuple)),
+    )

@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.dispatch import default_interpret
+
 NEG_INF = -3.0e38  # plain float (kernel-capture-safe)
 
 
@@ -63,8 +65,9 @@ def decode_attention_pallas(
     *,
     block_s: int = 512,
     softcap: float = 0.0,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
+    interpret = default_interpret(interpret)
     B, Hq, D = q.shape
     S, Hkv = k.shape[1], k.shape[2]
     G = Hq // Hkv

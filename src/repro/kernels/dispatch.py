@@ -1,0 +1,22 @@
+"""Single platform sniff shared by every Pallas kernel entry point.
+
+`ops._resolve_impl` and the kernels' own jitted wrappers both resolve
+`interpret=None` here, so a direct call to e.g. `ebg_membership_pallas`
+on TPU gets the compiled kernel — the same default a call routed through
+`repro.kernels.ops` would get — instead of silently running the
+interpreter.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret(interpret: bool | None = None) -> bool:
+    """interpret=None -> Pallas interpreter off-TPU, compiled kernel on TPU.
+
+    An explicit True/False always wins over the sniff (compiled Pallas is
+    forceable off-TPU, the interpreter on TPU).
+    """
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)

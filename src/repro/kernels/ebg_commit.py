@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: fused EBG block commit (score + argmin + commit).
+
+`ebg_membership_pallas` only covers the vectorizable score phase; the
+chunked partitioner still paid one p-wide argmin plus four scattered
+1-element updates per edge back in XLA land. This kernel fuses the whole
+per-block pipeline:
+
+  1. membership of the block's 2·B endpoints against the block-start
+     packed bitset (vectorized, VPU-friendly),
+  2. the sequential per-edge argmin + exact balance-term commit,
+  3. the per-winner bitset updates,
+
+with the (p,) e/v counters and the (p, ⌈V/32⌉) uint32 bitset resident in
+VMEM for the whole block — HBM sees one bitset read + one write per block
+instead of four scattered touches per edge. Assignments are bit-identical
+to the unfused path (`repro.kernels.ref.ebg_commit_block_ref`): membership
+is pinned to the block-start bitset, so the in-loop bit commits never feed
+back into this block's scores.
+
+alpha/beta/inv_e/inv_v ride in as a (4,) f32 coefficient vector — they are
+traced values in `_ebg_chunked` (inv_e depends on the real edge count), so
+they cannot be static kernel parameters.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.dispatch import default_interpret
+
+
+def _ebg_commit_kernel(
+    u_ref, v_ref, valid_ref, coef_ref, keep_in_ref, e_in_ref, v_in_ref,
+    keep_ref, e_ref, vc_ref, parts_ref, *, num_parts: int
+):
+    u = u_ref[...]
+    v = v_ref[...]
+    valid = valid_ref[...]
+    alpha, beta, inv_e, inv_v = coef_ref[0], coef_ref[1], coef_ref[2], coef_ref[3]
+    keep = keep_in_ref[...]  # [p, Vw] block-start bitset, pinned for scoring
+
+    def miss(ids):
+        words = keep[:, ids >> 5]  # [p, B] gather along the packed axis
+        bits = (words >> (ids & 31).astype(jnp.uint32)) & jnp.uint32(1)
+        return (jnp.uint32(1) - bits).astype(jnp.float32)
+
+    memb = miss(u) + miss(v)  # [p, B]
+    keep_ref[...] = keep  # commit loop mutates the output copy in place
+
+    def body(j, carry):
+        e_c, v_c = carry
+        score = memb[:, j] + alpha * e_c * inv_e + beta * v_c * inv_v
+        i = jnp.argmin(score).astype(jnp.int32)  # ties -> lowest subgraph id
+        live = valid[j].astype(jnp.float32)
+        e_c = e_c.at[i].add(live)
+        v_c = v_c.at[i].add(live * memb[i, j])
+        pl.store(
+            parts_ref,
+            (pl.dslice(j, 1),),
+            jnp.where(valid[j] != 0, i, num_parts).reshape(1),
+        )
+
+        @pl.when(valid[j] != 0)
+        def _commit_bits():
+            wu = u[j] >> 5
+            bu = jnp.uint32(1) << (u[j] & 31).astype(jnp.uint32)
+            cur_u = pl.load(keep_ref, (pl.dslice(i, 1), pl.dslice(wu, 1)))
+            pl.store(keep_ref, (pl.dslice(i, 1), pl.dslice(wu, 1)), cur_u | bu)
+            # v's word is read AFTER u's store: u and v may share a word.
+            wv = v[j] >> 5
+            bv = jnp.uint32(1) << (v[j] & 31).astype(jnp.uint32)
+            cur_v = pl.load(keep_ref, (pl.dslice(i, 1), pl.dslice(wv, 1)))
+            pl.store(keep_ref, (pl.dslice(i, 1), pl.dslice(wv, 1)), cur_v | bv)
+
+        return e_c, v_c
+
+    e_c, v_c = jax.lax.fori_loop(0, u.shape[0], body, (e_in_ref[...], v_in_ref[...]))
+    e_ref[...] = e_c
+    vc_ref[...] = v_c
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ebg_commit_block_pallas(
+    keep_bits: jax.Array,  # [p, Vw] uint32
+    e_count: jax.Array,  # [p] f32
+    v_count: jax.Array,  # [p] f32
+    u: jax.Array,  # [B] int32
+    v: jax.Array,  # [B] int32
+    valid: jax.Array,  # [B] bool (pad edges False)
+    coef: jax.Array,  # [4] f32: alpha, beta, inv_e, inv_v
+    *,
+    interpret: bool | None = None,
+):
+    interpret = default_interpret(interpret)
+    p, vw = keep_bits.shape
+    B = u.shape[0]
+    keep_out, e_out, v_out, parts = pl.pallas_call(
+        functools.partial(_ebg_commit_kernel, num_parts=p),
+        out_shape=(
+            jax.ShapeDtypeStruct((p, vw), jnp.uint32),
+            jax.ShapeDtypeStruct((p,), jnp.float32),
+            jax.ShapeDtypeStruct((p,), jnp.float32),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+        ),
+        interpret=interpret,
+    )(u, v, valid.astype(jnp.int32), coef, keep_bits, e_count, v_count)
+    return keep_out, e_out, v_out, parts

@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.dispatch import default_interpret
+
 
 def _ebg_membership_kernel(u_ref, v_ref, keep_ref, out_ref):
     u = u_ref[...]
@@ -36,8 +38,9 @@ def ebg_membership_pallas(
     v: jax.Array,  # [E] int32
     *,
     block_e: int = 512,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
+    interpret = default_interpret(interpret)
     E = u.shape[0]
     p, vw = keep_bits.shape
     assert E % block_e == 0

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from repro.api.config import COMPUTE_BACKENDS, check_compute_backend  # noqa: F401  (re-exported seam)
 from repro.kernels import ref
 from repro.kernels.decode_attn import decode_attention_pallas
+from repro.kernels.dispatch import default_interpret
+from repro.kernels.ebg_commit import ebg_commit_block_pallas
 from repro.kernels.ebg_score import ebg_membership_pallas
 from repro.kernels.segment_reduce import segment_reduce_pallas
 
@@ -43,9 +45,7 @@ def _resolve_impl(impl: str | None, interpret: bool | None) -> tuple[str, bool]:
     impl = impl or _default_impl()
     if impl not in IMPLS:
         raise ValueError(f"impl must be one of {IMPLS} or None, got {impl!r}")
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    return impl, interpret
+    return impl, default_interpret(interpret)
 
 
 def _pad_to_block(lsrc, ldst, weight, block_e: int, pad_dst: int, identity: float):
@@ -117,6 +117,35 @@ def ebg_membership(
         v = jnp.concatenate([v, jnp.zeros((pad,), v.dtype)])
     out = ebg_membership_pallas(keep_bits, u, v, block_e=block_e, interpret=interpret)
     return out[:, :E] if pad else out
+
+
+def ebg_commit_block(
+    keep_bits, e_count, v_count, u, v, valid, *,
+    alpha, beta, inv_e, inv_v,
+    impl: str | None = None, interpret: bool | None = None,
+):
+    """Fused EBG block commit: membership score + argmin + exact balance
+    commit + bitset update for a whole edge block, with the (p,) counters
+    and the (p, ⌈V/32⌉) bitset VMEM-resident on the Pallas path.
+
+    alpha/beta/inv_e/inv_v may be traced scalars (inv_e depends on the real
+    edge count). Pad edges carry valid=False: they are scored (uniform lane
+    work) but never committed, and their assignment is the out-of-bounds
+    row p. Returns (keep_bits, e_count, v_count, parts) — assignments
+    bit-identical across impls and to the dense-membership XLA path.
+    """
+    impl, interpret = _resolve_impl(impl, interpret)
+    if impl == "ref":
+        return ref.ebg_commit_block_ref(
+            keep_bits, e_count, v_count, u, v, valid,
+            alpha=alpha, beta=beta, inv_e=inv_e, inv_v=inv_v,
+        )
+    coef = jnp.stack([
+        jnp.float32(alpha), jnp.float32(beta), jnp.float32(inv_e), jnp.float32(inv_v)
+    ])
+    return ebg_commit_block_pallas(
+        keep_bits, e_count, v_count, u, v, valid, coef, interpret=interpret
+    )
 
 
 def decode_attention(

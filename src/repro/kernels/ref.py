@@ -40,6 +40,44 @@ def ebg_membership_ref(keep_bits, u, v):
     return miss(u) + miss(v)
 
 
+def ebg_commit_block_ref(keep_bits, e_count, v_count, u, v, valid, *, alpha, beta, inv_e, inv_v):
+    """Fused EBG block commit: score + argmin + balance commit + bitset update.
+
+    Membership is evaluated against the BLOCK-START bitset (same staleness
+    contract as the chunked scorer); the balance terms are committed exactly
+    and sequentially within the block. Invalid (pad) edges are scored but
+    never committed — their assignment is the out-of-bounds row p, dropped
+    by the bit scatter. Arithmetic is term-for-term the per-edge loop the
+    chunked partitioner ran in-engine before this op existed, so the
+    assignments are bit-identical.
+
+    Returns (keep_bits, e_count, v_count, parts).
+    """
+    p = keep_bits.shape[0]
+    memb = ebg_membership_ref(keep_bits, u, v)  # [p, B] against block-start keep
+
+    def body(j, carry):
+        e_c, v_c, kb, parts = carry
+        score = memb[:, j] + alpha * e_c * inv_e + beta * v_c * inv_v
+        i = jnp.argmin(score).astype(jnp.int32)
+        live = valid[j].astype(jnp.float32)
+        e_c = e_c.at[i].add(live)
+        v_c = v_c.at[i].add(live * memb[i, j])
+        row = jnp.where(valid[j], i, p)
+        uu, vv = u[j], v[j]
+        bit_u = jnp.uint32(1) << (uu & 31).astype(jnp.uint32)
+        kb = kb.at[row, uu >> 5].set(kb[i, uu >> 5] | bit_u, mode="drop")
+        bit_v = jnp.uint32(1) << (vv & 31).astype(jnp.uint32)
+        kb = kb.at[row, vv >> 5].set(kb[i, vv >> 5] | bit_v, mode="drop")
+        return e_c, v_c, kb, parts.at[j].set(row)
+
+    e_count, v_count, keep_bits, parts = jax.lax.fori_loop(
+        0, u.shape[0], body,
+        (e_count, v_count, keep_bits, jnp.zeros(u.shape, jnp.int32)),
+    )
+    return keep_bits, e_count, v_count, parts
+
+
 def decode_attention_ref(q, k, v, *, softcap: float = 0.0):
     """Single-token GQA decode attention.
 

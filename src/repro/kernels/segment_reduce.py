@@ -30,6 +30,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.dispatch import default_interpret
+
 INF = 3.0e38  # plain float: jnp constants would be captured by the kernel tracer
 
 
@@ -98,7 +100,7 @@ def segment_reduce_pallas(
     num_out: int,
     block_e: int = 512,
     op: str = "min",
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """⊕-reduce edge contributions into destinations.
 
@@ -108,6 +110,7 @@ def segment_reduce_pallas(
     val: [V] f32 (V >= num_out).
     Returns out: [num_out] f32; for op=="min", out is pre-seeded with val.
     """
+    interpret = default_interpret(interpret)
     E = lsrc.shape[0]
     assert E % block_e == 0, "pad edges to a multiple of block_e"
     is_min = op == "min"

@@ -2,12 +2,32 @@ import numpy as np
 import pytest
 
 from repro.core.types import Graph
-from repro.graph.generate import make_graph
+from repro.graph.generate import make_graph, rmat
 
 
 @pytest.fixture(scope="session")
 def tiny_powerlaw() -> Graph:
     return make_graph("tiny_powerlaw")
+
+
+@pytest.fixture(scope="session")
+def small_powerlaw() -> Graph:
+    """Smaller-than-tiny power-law graph: keeps pallas-interpret engine
+    runs fast (shared by the backend-parity and driver-parity suites)."""
+    return rmat(256, 1024, seed=3)
+
+
+@pytest.fixture(scope="session")
+def built_small(small_powerlaw):
+    """(graph, symmetrized SubgraphSet, directed SubgraphSet) on the EBG
+    4-part partition of `small_powerlaw`."""
+    from repro.core import PARTITIONERS
+    from repro.graph.build import build_subgraphs
+
+    res = PARTITIONERS["ebg"](small_powerlaw, 4)
+    sub_sym = build_subgraphs(small_powerlaw, res, symmetrize=True)
+    sub_dir = build_subgraphs(small_powerlaw, res, symmetrize=False)
+    return small_powerlaw, sub_sym, sub_dir
 
 
 @pytest.fixture(scope="session")

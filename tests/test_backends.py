@@ -10,24 +10,12 @@ import pytest
 from repro.core import PARTITIONERS, ebg_partition_chunked
 from repro.graph import algorithms as alg
 from repro.graph.build import build_subgraphs
-from repro.graph.generate import rmat
 from repro.kernels import ops, ref
 
 BACKENDS = ("xla", "ref", "pallas")
 
-
-@pytest.fixture(scope="module")
-def small_powerlaw():
-    """Small power-law graph: keeps the pallas-interpret engine runs fast."""
-    return rmat(256, 1024, seed=3)
-
-
-@pytest.fixture(scope="module")
-def built_small(small_powerlaw):
-    res = PARTITIONERS["ebg"](small_powerlaw, 4)
-    sub_sym = build_subgraphs(small_powerlaw, res, symmetrize=True)
-    sub_dir = build_subgraphs(small_powerlaw, res, symmetrize=False)
-    return small_powerlaw, sub_sym, sub_dir
+# small_powerlaw / built_small fixtures live in conftest.py (shared with
+# tests/test_drivers.py).
 
 
 # ------------------------------------------------- segment-reduce edge cases
@@ -212,6 +200,88 @@ def test_registry_compute_backend_capability():
     assert get_partitioner("ebg").compute_backends == ("xla",)
 
 
+# --------------------------------------------------- fused EBG block commit
+
+
+def _commit_oracle_dense(keep_bool, e_count, v_count, u, v, valid, alpha, beta, inv_e, inv_v):
+    """The pre-fusion in-engine commit path: dense (p, V) bool membership +
+    per-edge fori_loop with separate scatter updates (exactly the old
+    `_ebg_chunked` block body). Independent representation (bool table vs
+    packed bitset), same jnp arithmetic — the fused op must match it
+    bit-for-bit."""
+    import jax
+
+    @jax.jit
+    def run(keep, e_c, v_c, ub, vb, valb):
+        p = keep.shape[0]
+        miss_u = ~keep[:, ub]
+        miss_v = ~keep[:, vb]
+        memb = miss_u.astype(jnp.float32) + miss_v.astype(jnp.float32)
+
+        def body(j, carry):
+            e_c, v_c, parts = carry
+            score = memb[:, j] + alpha * e_c * inv_e + beta * v_c * inv_v
+            i = jnp.argmin(score).astype(jnp.int32)
+            live = valb[j].astype(jnp.float32)
+            e_c = e_c.at[i].add(live)
+            v_c = v_c.at[i].add(live * memb[i, j])
+            return e_c, v_c, parts.at[j].set(jnp.where(valb[j], i, p))
+
+        e_c, v_c, parts = jax.lax.fori_loop(
+            0, ub.shape[0], body, (e_c, v_c, jnp.zeros(ub.shape, jnp.int32))
+        )
+        keep = keep.at[parts, ub].set(True, mode="drop")
+        keep = keep.at[parts, vb].set(True, mode="drop")
+        return keep, e_c, v_c, parts
+
+    keep, e_c, v_c, parts = run(
+        jnp.asarray(keep_bool), jnp.asarray(e_count), jnp.asarray(v_count),
+        jnp.asarray(u), jnp.asarray(v), jnp.asarray(valid),
+    )
+    return np.asarray(ops.pack_keep_bits(keep)), np.asarray(e_c), np.asarray(v_c), np.asarray(parts)
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+@pytest.mark.parametrize("block", [1, 64, 256])
+def test_ebg_commit_block_matches_oracle(impl, block):
+    """The fused op (membership + argmin + balance commit + bitset update in
+    one kernel) is bit-identical to the unfused per-edge semantics,
+    including pad edges, shared endpoint words, and warm-start counters."""
+    rng = np.random.default_rng(21)
+    p, V = 4, 100
+    keep = rng.random((p, V)) < 0.2
+    kb = ops.pack_keep_bits(jnp.array(keep))
+    e_c = jnp.asarray(rng.integers(0, 50, p).astype(np.float32))
+    v_c = jnp.asarray(rng.integers(0, 30, p).astype(np.float32))
+    u = rng.integers(0, V, block).astype(np.int32)
+    v = rng.integers(0, V, block).astype(np.int32)
+    valid = rng.random(block) < 0.9  # some pad edges sprinkled in
+    alpha, beta, inv_e, inv_v = 1.0, 1.0, p / 500.0, p / float(V)
+    got = ops.ebg_commit_block(
+        kb, e_c, v_c, jnp.asarray(u), jnp.asarray(v), jnp.asarray(valid),
+        alpha=alpha, beta=beta, inv_e=inv_e, inv_v=inv_v, impl=impl,
+    )
+    want = _commit_oracle_dense(keep, e_c, v_c, u, v, valid, alpha, beta, inv_e, inv_v)
+    for g, w, name in zip(got, want, ("keep_bits", "e_count", "v_count", "parts")):
+        np.testing.assert_array_equal(np.asarray(g), w, err_msg=name)
+
+
+def test_ebg_commit_block_ref_pallas_identical():
+    rng = np.random.default_rng(22)
+    p, V, B = 8, 64, 128
+    kb = ops.pack_keep_bits(jnp.array(rng.random((p, V)) < 0.3))
+    e_c = jnp.zeros((p,), jnp.float32)
+    v_c = jnp.zeros((p,), jnp.float32)
+    u = jnp.asarray(rng.integers(0, V, B).astype(np.int32))
+    v = jnp.asarray(rng.integers(0, V, B).astype(np.int32))
+    valid = jnp.ones((B,), bool)
+    kw = dict(alpha=1.0, beta=1.0, inv_e=p / 1000.0, inv_v=p / float(V))
+    a = ops.ebg_commit_block(kb, e_c, v_c, u, v, valid, impl="ref", **kw)
+    b = ops.ebg_commit_block(kb, e_c, v_c, u, v, valid, impl="pallas", **kw)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
 # ------------------------------------------------- chunked EBG bitset parity
 
 
@@ -282,8 +352,10 @@ def test_bspstats_max_mean_single_definition():
         messages_per_step=np.array([120]),
         comp_work_per_worker=np.zeros(4, np.int64),
         inner_iters_per_step=np.ones((1, 4), np.int64),
+        messages_per_step_worker=msgs[None, :],
     )
     assert stats.max_mean == max_mean_ratio(msgs) == pytest.approx(2.0)
     zero = BSPStats(1, np.zeros(4, np.int64), np.zeros(1, np.int64),
-                    np.zeros(4, np.int64), np.ones((1, 4), np.int64))
+                    np.zeros(4, np.int64), np.ones((1, 4), np.int64),
+                    np.zeros((1, 4), np.int64))
     assert zero.max_mean == max_mean_ratio(np.zeros(4)) == 1.0

@@ -54,14 +54,21 @@ from repro.graph.engine import CC, init_cc, make_distributed_stepper, subgraphs_
 g = make_graph("tiny_powerlaw")
 res = ebg_partition(g, 8)
 sub = build_subgraphs(g, res, symmetrize=True)
-labels_sim, _ = alg.connected_components(sub)
+labels_sim, stats_sim = alg.connected_components(sub)
 from repro.launch.mesh import make_mesh_compat
 mesh = make_mesh_compat((8,), ("workers",))
 arrays, statics = subgraphs_to_arrays(sub)
 stepper = make_distributed_stepper(mesh, "workers", CC, statics, num_supersteps=10, inner_cap=100)
 with mesh:
-    val, msgs = jax.jit(stepper)(arrays, init_cc(sub))
+    val, msgs, steps, msgs_steps, iters_steps = jax.jit(stepper)(arrays, init_cc(sub))
 assert np.array_equal(labels_sim, np.asarray(val[:, :-1]))
+# Convergence exit: the while_loop stops early and its per-step message
+# series matches the simulation driver's (same superstep semantics).
+steps = int(steps)
+assert steps == stats_sim.supersteps < 10
+assert np.array_equal(np.asarray(msgs_steps)[:steps], stats_sim.messages_per_step_worker)
+assert np.array_equal(np.asarray(msgs), stats_sim.messages_per_worker)
+assert np.array_equal(np.asarray(iters_steps)[:steps], stats_sim.inner_iters_per_step)
 print("OK")
 """
     )
