@@ -19,7 +19,7 @@ import numpy as np
 
 from benchmarks.common import PARTS, load_graph
 from repro.api import GraphPipeline
-from repro.graph.engine import CC, _jit_min_superstep_sim, init_cc
+from repro.graph.engine import CC, _jit_superstep_sim, init_cc
 
 T_MSG = 2.0e-7
 
@@ -38,8 +38,8 @@ def per_worker_breakdown(pipe: GraphPipeline, max_supersteps=100):
 
     # warm-up: compile the per-worker and batched kernels outside the timers
     for i in range(p):
-        _jit_min_superstep_sim(CC, subs[i], val[i : i + 1], 10_000, False, val[i : i + 1])[0].block_until_ready()
-    _jit_min_superstep_sim(CC, sub, val, 1, True, val)
+        _jit_superstep_sim(CC, subs[i], val[i : i + 1], 10_000, False, val[i : i + 1])[0].block_until_ready()
+    _jit_superstep_sim(CC, sub, val, 1, True, val)
 
     comp = np.zeros(p)
     comm = np.zeros(p)
@@ -53,7 +53,7 @@ def per_worker_breakdown(pipe: GraphPipeline, max_supersteps=100):
         for i in range(p):
             vi = val[i : i + 1]
             t0 = time.time()
-            out, _, _ = _jit_min_superstep_sim(CC, subs[i], vi, 10_000, False, vi)
+            out, _, _, _ = _jit_superstep_sim(CC, subs[i], vi, 10_000, False, vi)
             out.block_until_ready()
             dt = time.time() - t0
             step_t[i] += dt
@@ -62,7 +62,7 @@ def per_worker_breakdown(pipe: GraphPipeline, max_supersteps=100):
         val = jnp.concatenate(new_rows, axis=0)
         # communication stage: batched exchange; per-worker cost modeled
         # from its measured message count.
-        val, msgs, _ = _jit_min_superstep_sim(CC, sub, val, 1, True, before)
+        val, msgs, _, _ = _jit_superstep_sim(CC, sub, val, 1, True, before)
         m = np.asarray(msgs, np.float64)
         comm += m * T_MSG
         step_t += m * T_MSG

@@ -2,8 +2,12 @@
 
 Emits machine-readable `BENCH_pipeline.json` at the repo root so the perf
 trajectory is tracked from PR 3 onward: partition wall, build wall
-(vectorized vs legacy builder), and for each engine program the host- vs
-fused-driver wall, supersteps/s, dispatch counts, and message stats.
+(vectorized vs legacy builder), and for EVERY registered engine program
+(CC, SSSP, BFS, reachability, PageRank — all through the one generic
+`VertexProgram` driver) the host- vs fused-driver wall, supersteps/s,
+dispatch counts, and message stats, plus a distributed-PageRank section
+(sim-vs-dist value match, messages, supersteps) run on a forced 8-device
+host mesh in a subprocess.
 
 Two speedup figures per engine program:
   - wall_speedup: measured host/fused wall ratio. On a CPU host, dispatch
@@ -19,6 +23,8 @@ Usage: python -m benchmarks.pipeline_smoke [repeats]
 from __future__ import annotations
 
 import json
+import os
+import subprocess
 import sys
 import time
 from pathlib import Path
@@ -31,6 +37,36 @@ from repro.graph.generate import rmat
 
 P = 32
 OUT = Path(__file__).resolve().parents[1] / "BENCH_pipeline.json"
+SRC = Path(__file__).resolve().parents[1] / "src"
+
+# Every registered program, with its engine kwargs. PageRank runs its
+# fixed-iteration mode; the rest run to fixpoint.
+PROGRAMS = (("cc", {}), ("sssp", {}), ("bfs", {}), ("reach", {}), ("pr", {"num_iters": 20}))
+
+_DIST_PR_CODE = """
+import json
+import numpy as np
+from repro.api import GraphPipeline
+from repro.graph.generate import rmat
+from repro.launch.mesh import make_host_mesh
+
+g = rmat(1 << 12, 40_000, seed=7, a=0.65, b=0.15, c=0.15)
+pipe = GraphPipeline(g).partition("ebg_chunked", parts=8)
+mesh = make_host_mesh(8)
+sim = pipe.run("pr", num_iters=10)
+import time
+t0 = time.perf_counter()
+dist = pipe.run("pr", mode="dist", mesh=mesh, num_iters=10)
+wall = time.perf_counter() - t0
+print(json.dumps({
+    "p": 8,
+    "supersteps": dist.stats.supersteps,
+    "messages_total": dist.stats.total_messages,
+    "messages_max_mean": round(float(dist.stats.max_mean), 3),
+    "matches_sim": bool(np.array_equal(sim.values, dist.values)),
+    "wall_s": round(wall, 4),
+}))
+"""
 
 
 def _med(fn, repeats: int) -> float:
@@ -40,6 +76,22 @@ def _med(fn, repeats: int) -> float:
         fn()
         walls.append(time.perf_counter() - t0)
     return float(np.median(walls))
+
+
+def _dist_pagerank_section() -> dict:
+    """Distributed PageRank stats on an 8-device host mesh. XLA locks the
+    device count at first init, so this runs in a subprocess with its own
+    XLA_FLAGS (exactly how the system tests do it)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(SRC)
+    out = subprocess.run(
+        [sys.executable, "-c", _DIST_PR_CODE],
+        capture_output=True, text=True, env=env, timeout=560,
+    )
+    if out.returncode != 0:
+        return {"error": (out.stderr or out.stdout).strip()[-500:]}
+    return json.loads(out.stdout.strip().splitlines()[-1])
 
 
 def main(repeats: int = 3, out_path: Path = OUT) -> dict:
@@ -56,7 +108,7 @@ def main(repeats: int = 3, out_path: Path = OUT) -> dict:
 
     engine: dict = {}
     totals = {"host": 0.0, "fused": 0.0, "dispatches_host": 0, "dispatches_fused": 0}
-    for prog, kw in (("cc", {}), ("sssp", {}), ("pr", {"num_iters": 20})):
+    for prog, kw in PROGRAMS:
         pipe.prepare(prog)
         pipe.run(prog, driver="host", **kw)  # compile outside the timers
         run = pipe.run(prog, driver="fused", **kw)  # warmup doubles as the stats run
@@ -84,8 +136,10 @@ def main(repeats: int = 3, out_path: Path = OUT) -> dict:
         totals["dispatches_host"] += steps
         totals["dispatches_fused"] += 1
 
+    dist_pr = _dist_pagerank_section()
+
     data = {
-        "schema": 1,
+        "schema": 2,
         "graph": {"family": "twitter_like_smoke", "num_vertices": graph.num_vertices,
                   "num_edges": graph.num_edges, "p": P},
         "partition": {"partitioner": "ebg_chunked", "wall_s": round(partition_s, 3)},
@@ -103,18 +157,23 @@ def main(repeats: int = 3, out_path: Path = OUT) -> dict:
                 "dispatch_reduction": round(totals["dispatches_host"] / totals["dispatches_fused"], 1),
             },
         },
+        "dist": {"pr": dist_pr},
     }
-    # The structural claim CI holds the line on: the fused driver turns
-    # one-dispatch-per-superstep into one dispatch per run.
+    # The structural claims CI holds the line on: the fused driver turns
+    # one-dispatch-per-superstep into one dispatch per run, and distributed
+    # PageRank (new with the VertexProgram engine) matches simulation.
     assert data["engine"]["total"]["dispatch_reduction"] >= 2.0, data["engine"]["total"]
+    assert dist_pr.get("matches_sim", False), dist_pr
 
     out_path.write_text(json.dumps(data, indent=2) + "\n")
     e = data["engine"]["total"]
+    progs = "/".join(name for name, _ in PROGRAMS)
     print(
-        f"BENCH_pipeline: partition {partition_s:.2f}s | build {build_s:.3f}s "
+        f"BENCH_pipeline [{progs}]: partition {partition_s:.2f}s | build {build_s:.3f}s "
         f"({data['build']['speedup_vs_legacy']}x vs legacy) | engine host {e['host_wall_s']:.3f}s "
         f"-> fused {e['fused_wall_s']:.3f}s ({e['wall_speedup']}x wall, "
-        f"{e['dispatch_reduction']}x fewer dispatches) -> {out_path.name}"
+        f"{e['dispatch_reduction']}x fewer dispatches) | dist pr msgs "
+        f"{dist_pr.get('messages_total')} -> {out_path.name}"
     )
     return data
 

@@ -36,6 +36,12 @@ def simulated_runtime(stats, edges_per_worker, t_edge: float) -> float:
     return float(per_step.sum())
 
 
+# Per-program engine kwargs — any registered VertexProgram name (cc, sssp,
+# bfs, reach, pr, or a custom registration) is a valid `algos` entry; the
+# facade resolves sources and build layouts per program.
+ALGO_KW = {"pr": dict(num_iters=10)}
+
+
 def run(scale: float = 1.0, algos=("cc", "pr", "sssp"), partitioners=PARTS,
         compute_backend="xla", warmup=False):
     out = {}
@@ -47,12 +53,8 @@ def run(scale: float = 1.0, algos=("cc", "pr", "sssp"), partitioners=PARTS,
             row = {}
             for name in partitioners:
                 pipe = get_pipeline(key, scale, name, p).prepare(algo)
-                kw = dict(compute_backend=compute_backend)
-                run_once = (
-                    (lambda: pipe.run(algo, num_iters=10, **kw))
-                    if algo == "pr"
-                    else (lambda: pipe.run(algo, **kw))
-                )
+                kw = dict(compute_backend=compute_backend, **ALGO_KW.get(algo, {}))
+                run_once = lambda: pipe.run(algo, **kw)
                 if warmup:
                     # Compile outside the timer with the EXACT call the
                     # timer makes: the fused driver's executable is keyed on

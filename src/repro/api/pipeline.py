@@ -8,7 +8,13 @@ views are cheap: `.partition(...)` starts a fresh stage; `.build(...)`
 and repeated `.run(...)` calls on the same stage reuse the cached
 `PartitionResult`, `PartitionMetrics`, and per-(symmetrize, pad) built
 `SubgraphSet`s. If `.build` is never called, `.run` picks the build the
-program needs (CC symmetrizes; SSSP/PageRank keep edge direction).
+program needs (bidirectional programs symmetrize; the rest keep edge
+direction).
+
+`.run` executes ANY registered `VertexProgram` (or a custom instance with
+an `init_fn`) in BOTH modes — `mode="sim"` batches all workers on one
+device, `mode="dist"` shard_maps one subgraph per mesh device through the
+same generic distributed stepper.
 
 Distributed execution shares the same facade: `GraphPipeline.from_spec`
 makes an abstract (shape-only) pipeline, and `.lower(mesh=...)` AOT-lowers
@@ -34,47 +40,45 @@ from repro.core.types import Graph, PartitionResult
 from repro.graph import algorithms as alg
 from repro.graph.build import SubgraphSet, build_subgraphs
 from repro.graph.engine import (
-    CC,
-    SSSP,
     BSPStats,
-    MinProgram,
+    VertexProgram,
     check_driver,
     check_int32_kernel_labels,
-    init_cc,
-    init_sssp,
+    get_program,
     make_distributed_stepper,
     subgraphs_to_arrays,
 )
 
-ProgramLike = Union[str, MinProgram]
+ProgramLike = Union[str, VertexProgram]
 
 
-def _resolve_program(program: ProgramLike) -> tuple[str, Optional[MinProgram]]:
-    """Normalize a program handle to (name, MinProgram-or-None-for-PR)."""
-    if isinstance(program, MinProgram):
-        # The facade owns init-value semantics, which only exist for the
-        # paper's programs — a custom MinProgram would silently run with
-        # the wrong init, so reject anything that isn't stock CC/SSSP.
-        if program == CC or program == SSSP:
-            return program.name, program
+def _resolve_program(program: ProgramLike) -> VertexProgram:
+    """Normalize a program handle to a runnable `VertexProgram`.
+
+    Strings go through the engine registry; instances are accepted as long
+    as they carry an `init_fn` (the facade needs initial values to run —
+    register custom programs with `repro.graph.engine.register_program` or
+    pass the instance directly)."""
+    prog = get_program(program)
+    if prog.init_fn is None:
         raise ValueError(
-            f"unsupported MinProgram {program.name!r}: GraphPipeline.run knows init "
-            "values for CC/SSSP/PR only — drive custom programs through "
-            "repro.graph.engine.run_min_bsp / make_distributed_stepper directly"
+            f"program {prog.name!r} has no init_fn: GraphPipeline cannot build its "
+            "initial values — set VertexProgram.init_fn, or drive it through "
+            "repro.graph.engine.run_bsp with an explicit init_val"
         )
-    key = str(program).lower()
-    if key in ("cc", "components", "connected_components"):
-        return "cc", CC
-    if key == "sssp":
-        return "sssp", SSSP
-    if key in ("pr", "pagerank"):
-        return "pr", None
-    raise ValueError(f"unknown program {program!r}; expected cc | sssp | pr")
+    return prog
 
 
-def _default_symmetrize(name: str, prog: Optional[MinProgram]) -> bool:
-    # CC treats the graph as undirected; SSSP/PageRank keep direction.
-    return bool(prog.bidirectional) if prog is not None else False
+def _translate_engine_kwargs(prog: VertexProgram, kw: dict) -> tuple[VertexProgram, dict]:
+    """Facade-level conveniences: `num_iters` is the PageRank-speak alias of
+    `max_supersteps`, and `damping` specializes the program instance."""
+    if "num_iters" in kw:
+        kw = dict(kw)
+        kw["max_supersteps"] = kw.pop("num_iters")
+    if "damping" in kw:
+        kw = dict(kw)
+        prog = dataclasses.replace(prog, damping=float(kw.pop("damping")))
+    return prog, kw
 
 
 def _normalize_axes(mesh, axes) -> tuple:
@@ -83,10 +87,10 @@ def _normalize_axes(mesh, axes) -> tuple:
     return (axes,) if isinstance(axes, str) else tuple(axes)
 
 
-# SSSP default source depends only on the graph, not the partition — cache
-# per graph object so a suite running 5 partitioners over one graph scans
-# the edge list once. Keyed by id() with a liveness check (Graph holds jax
-# arrays, so it is not hashable).
+# Default source (SSSP/BFS) depends only on the graph, not the partition —
+# cache per graph object so a suite running 5 partitioners over one graph
+# scans the edge list once. Keyed by id() with a liveness check (Graph holds
+# jax arrays, so it is not hashable).
 _SOURCE_CACHE: dict[int, tuple] = {}
 
 
@@ -133,7 +137,7 @@ class SubgraphSpec:
         statics = dict(num_parts=p, max_v=self.max_v, max_e=self.max_e, max_msg=self.max_msg)
         return arrays, statics
 
-    def value_spec(self, prog: MinProgram) -> jax.ShapeDtypeStruct:
+    def value_spec(self, prog: VertexProgram) -> jax.ShapeDtypeStruct:
         dt = jnp.int32 if prog.dtype == "int32" else jnp.float32
         return jax.ShapeDtypeStruct((self.num_parts, self.max_v + 1), dt)
 
@@ -261,10 +265,10 @@ class GraphPipeline:
     # ----------------------------------------------------------------- run
 
     def default_source(self) -> int:
-        """SSSP source: highest-degree covered vertex (benchmark convention)."""
+        """SSSP/BFS source: highest-degree covered vertex (benchmark convention)."""
         return _default_source_for(self.graph)
 
-    def _build_params_for(self, name: str, prog: Optional[MinProgram], symmetrize, pad_multiple) -> dict:
+    def _build_params_for(self, prog: VertexProgram, symmetrize, pad_multiple) -> dict:
         # Explicit per-call arguments (not None) win over params pinned by
         # `.build`, which win over program defaults.
         bp = dict(self._build_params or {})
@@ -272,9 +276,15 @@ class GraphPipeline:
             bp["symmetrize"] = symmetrize
         if pad_multiple is not None:
             bp["pad_multiple"] = pad_multiple
-        bp.setdefault("symmetrize", _default_symmetrize(name, prog))
+        # Bidirectional programs (CC/REACH) treat the graph as undirected.
+        bp.setdefault("symmetrize", bool(prog.bidirectional))
         bp.setdefault("pad_multiple", 8)
         return bp
+
+    def _source_for(self, prog: VertexProgram, source) -> Optional[int]:
+        if source is not None:
+            return int(source)
+        return self.default_source() if prog.needs_source else None
 
     def clear_builds(self) -> None:
         """Drop cached SubgraphSets (the partition result and metrics stay).
@@ -284,12 +294,12 @@ class GraphPipeline:
             self._state["builds"].clear()
 
     def prepare(self, program: ProgramLike = "cc", *, symmetrize=None, pad_multiple: Optional[int] = None) -> "GraphPipeline":
-        """Force partition + build (+ SSSP source) caches, so a subsequent
+        """Force partition + build (+ default source) caches, so a subsequent
         `.run` timing measures only the engine."""
-        name, prog = _resolve_program(program)
-        bp = self._build_params_for(name, prog, symmetrize, pad_multiple)
+        prog = _resolve_program(program)
+        bp = self._build_params_for(prog, symmetrize, pad_multiple)
         self.subgraphs_for(**bp)
-        if name == "sssp":
+        if prog.needs_source:
             self.default_source()
         return self
 
@@ -305,18 +315,21 @@ class GraphPipeline:
         driver: Optional[str] = None,
         **kw,
     ) -> "PipelineRun":
-        """Execute `program` over the partitioned graph and collect stats.
+        """Execute any registered program over the partitioned graph and
+        collect stats.
 
         mode="sim" batches all workers on one device (tests/benchmarks);
-        mode="dist" shard_maps one subgraph per device (pass mesh=...).
+        mode="dist" shard_maps one subgraph per device (pass mesh=...) —
+        BOTH modes run every program through the same generic engine.
         compute_backend routes the engine hot paths ("xla" | "ref" |
         "pallas"; default "xla"); driver selects the sim step loop
         ("fused" single-dispatch while_loop, the default, or "host" —
         one dispatch per superstep, kept for A/B). Extra kwargs flow to
-        the engine (max_supersteps, inner_cap, exchange_period,
-        num_iters, ...).
+        the engine (max_supersteps, inner_cap, exchange_period, tol,
+        num_iters — the PageRank alias of max_supersteps — damping, ...).
         """
-        name, prog = _resolve_program(program)
+        prog = _resolve_program(program)
+        prog, kw = _translate_engine_kwargs(prog, kw)
         if compute_backend is not None:
             kw["compute_backend"] = check_compute_backend(compute_backend)
         if driver is not None:
@@ -327,37 +340,37 @@ class GraphPipeline:
                     "the fused while_loop stepper"
                 )
             kw["driver"] = driver
-        sub = self.subgraphs_for(**self._build_params_for(name, prog, symmetrize, pad_multiple))
+        sub = self.subgraphs_for(**self._build_params_for(prog, symmetrize, pad_multiple))
+        src = self._source_for(prog, source)
         if mode == "sim":
-            if name == "pr":
-                values, stats = alg.pagerank(sub, self.graph.num_vertices, **kw)
-            elif name == "sssp":
-                src_v = self.default_source() if source is None else int(source)
-                values, stats = alg.sssp(sub, src_v, **kw)
-            else:
-                values, stats = alg.connected_components(sub, **kw)
+            values, stats = alg.run_program(
+                sub, prog, num_vertices=self.graph.num_vertices, source=src, **kw
+            )
         elif mode == "dist":
-            values, stats = self._run_distributed(name, prog, sub, source=source, **kw)
+            values, stats = self._run_distributed(prog, sub, source=src, **kw)
         else:
             raise ValueError(f"unknown mode {mode!r}; expected 'sim' or 'dist'")
-        return PipelineRun(pipeline=self, program=name, values=values, stats=stats, subgraphs=sub)
+        return PipelineRun(pipeline=self, program=prog.name, values=values, stats=stats, subgraphs=sub)
 
     def _run_distributed(
         self,
-        name: str,
-        prog: Optional[MinProgram],
+        prog: VertexProgram,
         sub: SubgraphSet,
         *,
         mesh,
         axes=None,
-        num_supersteps: int = 30,
+        num_supersteps: Optional[int] = None,
+        max_supersteps: Optional[int] = None,
         inner_cap: int = 10_000,
+        tol: float = 0.0,
         source: Optional[int] = None,
         compute_backend: str = "xla",
     ) -> tuple[np.ndarray, BSPStats]:
-        if prog is None:
-            raise ValueError("mode='dist' supports min-semiring programs (cc/sssp) only")
         check_int32_kernel_labels(prog, sub, compute_backend)
+        if max_supersteps is not None:  # sim-speak (and the num_iters alias)
+            num_supersteps = max_supersteps
+        if num_supersteps is None:
+            num_supersteps = prog.default_steps or 30
         axes = _normalize_axes(mesh, axes)
         ndev = int(np.prod([mesh.shape[a] for a in axes]))
         if ndev != sub.num_parts:
@@ -365,22 +378,23 @@ class GraphPipeline:
         arrays, statics = subgraphs_to_arrays(sub)
         stepper = make_distributed_stepper(
             mesh, axes, prog, statics, num_supersteps=num_supersteps, inner_cap=inner_cap,
-            compute_backend=compute_backend,
+            tol=tol, num_vertices=self.graph.num_vertices, compute_backend=compute_backend,
         )
-        if name == "cc":
-            init = init_cc(sub)
-        else:
-            init = init_sssp(sub, self.default_source() if source is None else int(source))
+        init = prog.init(sub, num_vertices=self.graph.num_vertices, source=source)
         with mesh:
             val, msgs, steps, msgs_steps, iters_steps = jax.jit(stepper)(arrays, init)
         steps = int(steps)
         msgs_sw = np.asarray(msgs_steps, np.int64)[:steps]
         iters_sw = np.asarray(iters_steps, np.int64)[:steps]
+        # Per-worker compute work from the returned inner-iteration buffer ×
+        # per-worker edge counts — the same formula the sim drivers use, so
+        # sim and dist stats agree exactly.
+        edges = np.asarray(sub.edge_mask.sum(axis=1), np.int64)
         stats = BSPStats(
             supersteps=steps,
             messages_per_worker=np.asarray(msgs, np.int64),
             messages_per_step=msgs_sw.sum(axis=1),
-            comp_work_per_worker=np.zeros((sub.num_parts,), np.int64),
+            comp_work_per_worker=(iters_sw * edges[None, :]).sum(axis=0),
             inner_iters_per_step=iters_sw,
             messages_per_step_worker=msgs_sw,
         )
@@ -396,33 +410,41 @@ class GraphPipeline:
         program: ProgramLike = "cc",
         num_supersteps: int = 4,
         inner_cap: int = 64,
+        tol: float = 0.0,
         symmetrize: Optional[bool] = None,
         pad_multiple: Optional[int] = None,
+        num_vertices: Optional[int] = None,
         compute_backend: str = "xla",
     ) -> LoweredBSP:
-        """AOT-lower the distributed BSP stepper (abstract or concrete).
+        """AOT-lower the distributed BSP stepper (abstract or concrete) for
+        ANY registered program.
 
-        Kernel backends ("ref"/"pallas") run int32 programs (CC) through
-        f32 — exact only for vertex ids below 2^24. Concrete pipelines are
-        checked here; an abstract (from_spec) pipeline has no labels to
-        check, so the CALLER must enforce the <2^24 precondition on the
-        arrays eventually fed to the compiled stepper.
+        Kernel backends ("ref"/"pallas") run int32 programs (CC/BFS/REACH)
+        through f32 — exact only for vertex ids below 2^24. Concrete
+        pipelines are checked here; an abstract (from_spec) pipeline has no
+        labels to check, so the CALLER must enforce the <2^24 precondition
+        on the arrays eventually fed to the compiled stepper. Programs whose
+        apply step renormalizes (PageRank) need `num_vertices=` when
+        lowering from an abstract spec.
         """
-        name, prog = _resolve_program(program)
+        prog = get_program(program)
         check_compute_backend(compute_backend)
-        if prog is None:
-            raise ValueError("lowering supports min-semiring programs (cc/sssp) only")
         axes = _normalize_axes(mesh, axes)
+        nv = self.graph.num_vertices if self.graph is not None else int(num_vertices or 0)
+        if prog.apply == "pagerank" and nv <= 0:
+            raise ValueError(
+                "lowering a pagerank-apply program from an abstract spec needs num_vertices="
+            )
         if self._spec is not None:
             spec = self._spec
         else:
-            sub = self.subgraphs_for(**self._build_params_for(name, prog, symmetrize, pad_multiple))
+            sub = self.subgraphs_for(**self._build_params_for(prog, symmetrize, pad_multiple))
             check_int32_kernel_labels(prog, sub, compute_backend)
             spec = SubgraphSpec.of(sub)
         arrays, statics = spec.array_specs()
         stepper = make_distributed_stepper(
             mesh, axes, prog, statics, num_supersteps=num_supersteps, inner_cap=inner_cap,
-            compute_backend=compute_backend,
+            tol=tol, num_vertices=nv, compute_backend=compute_backend,
         )
         spec2 = P(axes, None)
         spec3 = P(axes, None, None)
@@ -437,7 +459,7 @@ class GraphPipeline:
             compile_s = time.time() - t0
         return LoweredBSP(
             spec=spec,
-            program=name,
+            program=prog.name,
             mesh=mesh,
             axes=axes,
             lowered=lowered,

@@ -39,7 +39,6 @@ def ne_partition(graph: Graph, num_parts: int, *, seed: int = 0) -> PartitionRes
     order = np.argsort(ends, kind="stable")
     ends_s, eids_s = ends[order], eids[order]
     indptr = np.zeros(V + 1, dtype=np.int64)
-    np.add.at(indptr, ends + 1, 0)  # no-op, keep shape clear
     counts = np.bincount(ends, minlength=V)
     indptr[1:] = np.cumsum(counts)
     incident = eids_s  # incident[indptr[v]:indptr[v+1]] = edge ids at v
@@ -92,7 +91,6 @@ def ne_partition(graph: Graph, num_parts: int, *, seed: int = 0) -> PartitionRes
                     unassigned_deg[v] -= 1
                     if v != x:
                         push(int(v))
-            unassigned_deg[x] = max(0, int(unassigned_deg[x]))
 
     # Any leftovers (capacity rounding) go to the last partition.
     part[part < 0] = p - 1

@@ -44,12 +44,21 @@ class Graph:
         return np.unique(np.concatenate([np.asarray(self.src), np.asarray(self.dst)]))
 
     def validate(self) -> None:
+        """Raise ValueError naming the offending field on malformed graphs
+        (real exceptions, not `assert`s — they survive `python -O`)."""
         src = np.asarray(self.src)
         dst = np.asarray(self.dst)
-        assert src.shape == dst.shape and src.ndim == 1
-        assert src.min(initial=0) >= 0 and dst.min(initial=0) >= 0
-        assert src.max(initial=-1) < self.num_vertices
-        assert dst.max(initial=-1) < self.num_vertices
+        if src.ndim != 1 or src.shape != dst.shape:
+            raise ValueError(
+                f"src/dst must be 1-D and the same shape; got src {src.shape}, dst {dst.shape}"
+            )
+        for name, arr in (("src", src), ("dst", dst)):
+            if arr.min(initial=0) < 0:
+                raise ValueError(f"{name} has negative vertex id {int(arr.min())}")
+            if arr.max(initial=-1) >= self.num_vertices:
+                raise ValueError(
+                    f"{name} has vertex id {int(arr.max())} >= num_vertices={self.num_vertices}"
+                )
 
 
 @jax.tree_util.register_dataclass

@@ -1,3 +1,15 @@
 """repro.graph — subgraph-centric BSP substrate."""
 from repro.graph.build import SubgraphSet, build_subgraphs
-from repro.graph.engine import BSPStats, CC, SSSP, run_min_bsp, run_pagerank
+from repro.graph.engine import (
+    BFS,
+    CC,
+    PR,
+    REACH,
+    SSSP,
+    BSPStats,
+    VertexProgram,
+    get_program,
+    program_names,
+    register_program,
+    run_bsp,
+)

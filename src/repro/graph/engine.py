@@ -1,12 +1,21 @@
 """Subgraph-centric bulk-synchronous-parallel engine (paper §IV-B).
 
 One subgraph == one worker == one mesh device. A superstep is
-  1. compute:   local fixpoint over the subgraph's own edges ("think like a
-                graph" — iterate to convergence inside the subgraph),
+  1. compute:   local work over the subgraph's own edges ("think like a
+                graph") — either a fixpoint relaxation iterated to local
+                convergence (min/max-semiring programs) or a single sweep
+                (PageRank's push-sum),
   2. exchange:  mirror→master reduction then master→mirror broadcast over
                 fixed padded buffers (dense all_to_all; the TPU-native
                 替代 of MPI point-to-point sends),
   3. barrier:   implicit in SPMD — the collective is the synchronization.
+
+Every algorithm is expressed as a `VertexProgram` — a frozen description of
+what actually varies between them (value dtype, exchange combine, local
+compute, apply step, message policy, convergence rule). ONE generic
+superstep body, ONE fused driver, ONE host driver, and ONE distributed
+stepper execute any program; CC, SSSP, PageRank, BFS, and max-label
+reachability are stock instances in `PROGRAMS`.
 
 Two execution modes sharing the same superstep body:
   - simulation:   all p workers live on one device as a leading batch axis;
@@ -15,17 +24,24 @@ Two execution modes sharing the same superstep body:
                   Used by the multi-pod dry-run and real clusters.
 
 Messages are counted with delta semantics (a mirror/master "sends" only if
-its value changed this superstep) — the paper's platform-independent
-communication metric (Tables IV/V). `exchange_period > 1` enables bounded
-staleness (straggler mitigation): workers run k local supersteps between
-global exchanges; monotone (min-semiring) programs converge to the same
-fixpoint.
+its value changed this superstep) for semiring programs — the paper's
+platform-independent communication metric (Tables IV/V) — and every-step
+semantics for PageRank (it pushes rank shares unconditionally).
+`exchange_period > 1` enables bounded staleness (straggler mitigation):
+workers run k local supersteps between global exchanges; monotone
+(min/max-semiring) programs converge to the same fixpoint.
+
+Max-combine programs run on the existing min-plus machinery (and hence the
+min-plus Pallas kernels) via negation at the driver boundary: values are
+negated on entry and on exit, so the superstep body only ever sees the
+{min, sum} combines.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import functools
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -83,6 +99,208 @@ class BSPStats:
         return max_mean_ratio(self.messages_per_worker)
 
 
+# ----------------------------------------------------------- VertexProgram
+
+
+@dataclasses.dataclass(frozen=True)
+class VertexProgram:
+    """Everything that varies between BSP algorithms, in one hashable value.
+
+    A program is a static argument to the jitted drivers, so every field
+    must be hashable; semantics are strings/bools/floats, and `init_fn` is
+    a module-level function (compared by identity, which keeps the jit
+    cache stable across calls).
+
+    | field | meaning |
+    |---|---|
+    | dtype       | value dtype: "int32" or "float32" |
+    | combine     | exchange reduction & local semiring: "min" | "max" | "sum" |
+    | local       | "fixpoint" (relax to local convergence) or "sweep" (one out-degree-normalized push-sum pass — PageRank's compute) |
+    | weight      | what the semiring adds along an edge: "none", "edge" (the f32 edge weight), or "unit" (+1, BFS hop counts) |
+    | bidirectional | relax both edge directions (undirected algorithms) |
+    | apply       | master-side post-combine step: "none" or "pagerank" (damping + renormalize) |
+    | message_policy | "delta" (count only changed values — paper Tables IV/V) or "always" |
+    | convergence | "no_change" (fixpoint reached) or "tol" (L1 step delta below `tol`) |
+    | damping     | apply="pagerank" damping factor |
+    | init_fn     | (sub, *, num_vertices, source) -> [p, max_v+1] initial values |
+    | needs_source | facade resolves a default source vertex (SSSP/BFS) |
+    | default_steps | driver step budget when the caller passes none (PR's classic 20 power iterations) |
+    """
+
+    name: str
+    dtype: str
+    combine: str = "min"
+    local: str = "fixpoint"
+    weight: str = "none"
+    bidirectional: bool = False
+    apply: str = "none"
+    message_policy: str = "delta"
+    convergence: str = "no_change"
+    damping: float = 0.85
+    init_fn: Optional[Callable] = None
+    needs_source: bool = False
+    default_steps: Optional[int] = None
+    aliases: tuple = ()
+
+    def __post_init__(self):
+        checks = (
+            ("dtype", self.dtype, ("int32", "float32")),
+            ("combine", self.combine, ("min", "max", "sum")),
+            ("local", self.local, ("fixpoint", "sweep")),
+            ("weight", self.weight, ("none", "edge", "unit")),
+            ("apply", self.apply, ("none", "pagerank")),
+            ("message_policy", self.message_policy, ("delta", "always")),
+            ("convergence", self.convergence, ("no_change", "tol")),
+        )
+        for field, got, allowed in checks:
+            if got not in allowed:
+                raise ValueError(f"VertexProgram.{field} must be one of {allowed}, got {got!r}")
+        if self.combine == "sum" and self.local != "sweep":
+            raise ValueError("combine='sum' has no fixpoint semantics; use local='sweep'")
+        if self.apply == "pagerank" and self.combine != "sum":
+            raise ValueError("apply='pagerank' renormalizes summed partials; use combine='sum'")
+
+    @property
+    def inf(self):
+        """Largest representable "unreached" value of the program's dtype."""
+        return INF_I32 if self.dtype == "int32" else INF_F32
+
+    @property
+    def identity(self):
+        """Identity of the exchange combine (fills masked recv slots)."""
+        if self.combine == "sum":
+            return jnp.float32(0.0)
+        return -self.inf if self.combine == "max" else self.inf
+
+    def init(self, sub: SubgraphSet, *, num_vertices: int = 0, source=None) -> jax.Array:
+        if self.init_fn is None:
+            raise ValueError(
+                f"program {self.name!r} has no init_fn — pass init_val explicitly to run_bsp"
+            )
+        if self.needs_source and source is None:
+            raise ValueError(
+                f"program {self.name!r} is source-rooted: pass source= "
+                "(GraphPipeline defaults it to the highest-degree covered vertex)"
+            )
+        return self.init_fn(sub, num_vertices=num_vertices, source=source)
+
+
+def _exec_view(prog: VertexProgram) -> tuple[VertexProgram, bool]:
+    """The semiring actually executed: max-combine programs run as min over
+    negated values (reusing the min-plus kernels); everything else runs
+    as-is. Returns (program-for-the-superstep, negate-values?)."""
+    if prog.combine != "max":
+        return prog, False
+    return dataclasses.replace(prog, combine="min"), True
+
+
+# --------------------------------------------------------- program registry
+
+PROGRAMS: dict[str, VertexProgram] = {}
+
+
+def register_program(prog: VertexProgram) -> VertexProgram:
+    """Register a program under its name and aliases for string lookup
+    (`GraphPipeline.run("bfs")`, `run_bsp(sub, "cc")`, benchmarks)."""
+    # Keys are stored lowercased to match get_program's case-insensitive
+    # lookup, and all validated before inserting any, so a rejected
+    # registration leaves the registry untouched.
+    keys = tuple(k.lower() for k in (prog.name, *prog.aliases))
+    for key in keys:
+        if key in PROGRAMS:
+            raise ValueError(f"program name {key!r} already registered")
+    for key in keys:
+        PROGRAMS[key] = prog
+    return prog
+
+
+def get_program(program) -> VertexProgram:
+    """Resolve a program handle (VertexProgram instance or registered name)."""
+    if isinstance(program, VertexProgram):
+        return program
+    key = str(program).lower()
+    if key not in PROGRAMS:
+        names = sorted({p.name for p in PROGRAMS.values()})
+        raise ValueError(f"unknown program {program!r}; registered programs: {names}")
+    return PROGRAMS[key]
+
+
+def program_names() -> tuple:
+    """Primary (alias-free) names of all registered programs."""
+    return tuple(sorted({p.name for p in PROGRAMS.values()}))
+
+
+# ------------------------------------------------------------- init values
+
+
+def init_cc(sub: SubgraphSet, *, num_vertices: int = 0, source=None) -> jax.Array:
+    p = sub.gid.shape[0]
+    val = jnp.where(sub.vmask, sub.gid, INF_I32)
+    return jnp.concatenate([val, jnp.full((p, 1), INF_I32, jnp.int32)], axis=1)
+
+
+def init_sssp(sub: SubgraphSet, source: int, *, num_vertices: int = 0) -> jax.Array:
+    p = sub.gid.shape[0]
+    val = jnp.where(sub.gid == source, 0.0, INF_F32).astype(jnp.float32)
+    return jnp.concatenate([val, jnp.full((p, 1), INF_F32, jnp.float32)], axis=1)
+
+
+def init_pr(sub: SubgraphSet, num_vertices: int, *, source=None) -> jax.Array:
+    p = sub.gid.shape[0]
+    # Mirrors start with the same 1/N as masters (broadcast of the init) —
+    # every present vertex replica holds the global initial rank.
+    val = jnp.where(sub.vmask, 1.0 / num_vertices, 0.0).astype(jnp.float32)
+    return jnp.concatenate([val, jnp.zeros((p, 1), jnp.float32)], axis=1)
+
+
+def init_bfs(sub: SubgraphSet, source: int, *, num_vertices: int = 0) -> jax.Array:
+    p = sub.gid.shape[0]
+    val = jnp.where(sub.gid == source, 0, INF_I32).astype(jnp.int32)
+    return jnp.concatenate([val, jnp.full((p, 1), INF_I32, jnp.int32)], axis=1)
+
+
+def init_reach(sub: SubgraphSet, *, num_vertices: int = 0, source=None) -> jax.Array:
+    # Max-label propagation: absent slots hold the max identity (-INF).
+    p = sub.gid.shape[0]
+    val = jnp.where(sub.vmask, sub.gid, -INF_I32)
+    return jnp.concatenate([val, jnp.full((p, 1), -INF_I32, jnp.int32)], axis=1)
+
+
+# ---------------------------------------------------------- stock programs
+
+CC = register_program(VertexProgram(
+    name="cc", dtype="int32", combine="min", bidirectional=True,
+    init_fn=lambda sub, *, num_vertices=0, source=None: init_cc(sub),
+    aliases=("components", "connected_components"),
+))
+
+SSSP = register_program(VertexProgram(
+    name="sssp", dtype="float32", combine="min", weight="edge",
+    init_fn=lambda sub, *, num_vertices=0, source=None: init_sssp(sub, int(source)),
+    needs_source=True,
+))
+
+PR = register_program(VertexProgram(
+    name="pr", dtype="float32", combine="sum", local="sweep", apply="pagerank",
+    message_policy="always", convergence="tol",
+    init_fn=lambda sub, *, num_vertices=0, source=None: init_pr(sub, num_vertices),
+    default_steps=20,  # the classic fixed-iteration power-method budget
+    aliases=("pagerank",),
+))
+
+BFS = register_program(VertexProgram(
+    name="bfs", dtype="int32", combine="min", weight="unit",
+    init_fn=lambda sub, *, num_vertices=0, source=None: init_bfs(sub, int(source)),
+    needs_source=True,
+))
+
+REACH = register_program(VertexProgram(
+    name="reach", dtype="int32", combine="max", bidirectional=True,
+    init_fn=lambda sub, *, num_vertices=0, source=None: init_reach(sub),
+    aliases=("reachability",),
+))
+
+
 # ---------------------------------------------------------------- helpers
 
 
@@ -114,41 +332,43 @@ def _segment_min(data, seg, num_segments):
     return jax.ops.segment_min(data, seg, num_segments=num_segments, indices_are_sorted=True)
 
 
-# ------------------------------------------------------- min-semiring BSP
+# -------------------------------------------------- local compute (stage 1)
 
 
-@dataclasses.dataclass(frozen=True)
-class MinProgram:
-    """CC / SSSP family: propagate min(val[src] (+ w)) along edges."""
-
-    name: str
-    use_weight: bool  # SSSP adds edge weight; CC doesn't
-    bidirectional: bool  # CC treats edges as undirected
-    dtype: str  # "int32" | "float32"
-
-    @property
-    def inf(self):
-        return INF_I32 if self.dtype == "int32" else INF_F32
+def _edge_addend(prog: VertexProgram, weight: jax.Array, dtype) -> Optional[jax.Array]:
+    """What the semiring adds along an edge, or None for weight='none'."""
+    if prog.weight == "edge":
+        return weight.astype(dtype)
+    if prog.weight == "unit":
+        return jnp.ones_like(weight, dtype=dtype)
+    return None
 
 
-CC = MinProgram("cc", use_weight=False, bidirectional=True, dtype="int32")
-SSSP = MinProgram("sssp", use_weight=True, bidirectional=False, dtype="float32")
+def _add_saturating(prog: VertexProgram, data: jax.Array, w: jax.Array) -> jax.Array:
+    """data + w with the INF identity absorbing: int32 INF + 1 must stay INF
+    (not wrap to INT32_MIN and win every min — BFS over unreached sources).
+    f32 INF absorbs additions natively."""
+    if prog.dtype == "int32":
+        return jnp.where(data >= prog.inf, prog.inf, data + w)
+    return data + w
 
 
-def _relax_xla(prog: MinProgram, sub: SubgraphSet, v: jax.Array) -> jax.Array:
+def _relax_xla(prog: VertexProgram, sub: SubgraphSet, v: jax.Array) -> jax.Array:
     """One local relaxation sweep via generic XLA segment ops."""
     nseg = sub.max_v + 1
     inf = prog.inf
     data = jnp.take_along_axis(v, sub.lsrc, axis=1)
-    if prog.use_weight:
-        data = data + sub.weight.astype(v.dtype)
+    w = _edge_addend(prog, sub.weight, v.dtype)
+    if w is not None:
+        data = _add_saturating(prog, data, w)
     data = jnp.where(sub.edge_mask, data, inf)
     cand = jax.vmap(lambda d, s: _segment_min(d, s, nseg))(data, sub.ldst)
     new = jnp.minimum(v, cand)
     if prog.bidirectional:
         data2 = jnp.take_along_axis(v, sub.ldst_s, axis=1)
-        if prog.use_weight:
-            data2 = data2 + sub.weight_s.astype(v.dtype)
+        w2 = _edge_addend(prog, sub.weight_s, v.dtype)
+        if w2 is not None:
+            data2 = _add_saturating(prog, data2, w2)
         data2 = jnp.where(sub.edge_mask_s, data2, inf)
         cand2 = jax.vmap(lambda d, s: _segment_min(d, s, nseg))(data2, sub.lsrc_s)
         new = jnp.minimum(new, cand2)
@@ -156,11 +376,11 @@ def _relax_xla(prog: MinProgram, sub: SubgraphSet, v: jax.Array) -> jax.Array:
 
 
 def _make_relax_kernel(
-    prog: MinProgram, sub: SubgraphSet, backend: str, interpret: bool | None = None
+    prog: VertexProgram, sub: SubgraphSet, backend: str, interpret: bool | None = None
 ):
     """One local relaxation sweep via repro.kernels min-plus segment reduce,
     vmapped over the worker axis. Operates on f32 values (see the INF
-    remapping in `_local_min_fixpoint`); padded edges carry the INF weight
+    remapping in `_local_fixpoint`); padded edges carry the INF weight
     identity, matching the kernels' convention. `interpret=None` lets ops
     sniff the host backend; the distributed stepper passes the MESH
     platform instead, so lowering for a TPU mesh from a CPU host bakes in
@@ -168,7 +388,9 @@ def _make_relax_kernel(
     nseg = sub.max_v + 1
 
     def edge_w(weight, mask):
-        w = weight if prog.use_weight else jnp.zeros_like(weight)
+        w = _edge_addend(prog, weight, jnp.float32)
+        if w is None:
+            w = jnp.zeros_like(weight)
         return jnp.where(mask, w, INF_F32)
 
     w_fwd = edge_w(sub.weight, sub.edge_mask)
@@ -191,8 +413,8 @@ def _make_relax_kernel(
     return relax
 
 
-def _local_min_fixpoint(
-    prog: MinProgram,
+def _local_fixpoint(
+    prog: VertexProgram,
     sub: SubgraphSet,
     val: jax.Array,
     inner_cap: int,
@@ -202,10 +424,10 @@ def _local_min_fixpoint(
     """Batched local fixpoint. val: [p, max_v+1] (last slot = dump).
 
     backend "xla" runs generic segment ops; "ref"/"pallas" route through
-    repro.kernels.ops (f32 min-plus). For int32 programs (CC) the kernel
-    path remaps INF_I32 <-> INF_F32 and runs the loop in f32 — exact only
-    for vertex labels below 2^24 (`run_min_bsp` enforces this; graphs
-    beyond it must use backend "xla").
+    repro.kernels.ops (f32 min-plus). For int32 programs (CC/BFS/REACH) the
+    kernel path remaps INF_I32 <-> INF_F32 and runs the loop in f32 — exact
+    only for values below 2^24 (`run_bsp` enforces this; graphs beyond it
+    must use backend "xla").
     """
     if backend == "xla":
         relax = functools.partial(_relax_xla, prog, sub)
@@ -230,102 +452,133 @@ def _local_min_fixpoint(
     return new_val, iters
 
 
-def _min_superstep(
-    prog: MinProgram,
+def _local_sweep(
+    prog: VertexProgram,
+    sub: SubgraphSet,
+    val: jax.Array,
+    backend: str = "xla",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """One out-degree-normalized push-sum pass (PageRank's local compute):
+    each vertex pushes val/outdeg along its out-edges, summed at dst."""
+    p = val.shape[0]
+    nseg = sub.max_v + 1
+    outdeg = jnp.concatenate([sub.out_degree, jnp.ones((p, 1), jnp.float32)], axis=1)
+    share = jnp.where(outdeg > 0, val / outdeg, 0.0)
+    if backend == "xla":
+        data = jnp.take_along_axis(share, sub.lsrc, axis=1)
+        data = jnp.where(sub.edge_mask, data, 0.0)
+        return jax.vmap(
+            lambda d, s: jax.ops.segment_sum(d, s, num_segments=nseg, indices_are_sorted=True)
+        )(data, sub.ldst)
+    # sum-times segment reduce: padded edges carry scale=0 (sum identity).
+    scale = sub.edge_mask.astype(jnp.float32)
+    return jax.vmap(
+        functools.partial(
+            ops.segment_sum_scaled, num_out=nseg, impl=backend, interpret=interpret
+        ),
+        in_axes=(0, 0, 0, 0),
+    )(sub.lsrc, sub.ldst, scale, share)
+
+
+# --------------------------------------------------- THE generic superstep
+
+
+def _apply_step(prog: VertexProgram, sub: SubgraphSet, combined: jax.Array, num_vertices: int):
+    """Master-side post-combine step. "none" passes the combined value
+    through; "pagerank" turns summed partials into damped, renormalized
+    ranks at masters (mirrors zeroed until the broadcast)."""
+    if prog.apply == "none":
+        return combined
+    p = combined.shape[0]
+    base = (1.0 - prog.damping) / num_vertices
+    new = jnp.where(sub.is_master, base + prog.damping * combined[:, : sub.max_v], 0.0)
+    return jnp.concatenate([new, jnp.zeros((p, 1), jnp.float32)], axis=1)
+
+
+def _superstep(
+    prog: VertexProgram,
     sub: SubgraphSet,
     val,
     exchange,
     inner_cap: int,
     do_exchange: bool = True,
     count_ref=None,
+    num_vertices: int = 0,
     backend: str = "xla",
     interpret: bool | None = None,
 ):
-    """One BSP superstep. Returns (new_val, per-worker msg count, iters).
+    """ONE BSP superstep for ANY program. Returns
+    (new_val, per-worker msg count, per-worker inner iters, L1 delta).
 
-    `count_ref` is the value snapshot of the LAST exchange — delta messages
-    are counted against it (matters under bounded staleness).
+    Stages: local compute → mirror→master exchange + combine → apply →
+    master→mirror broadcast. `count_ref` is the value snapshot of the LAST
+    exchange — delta messages are counted against it (matters under bounded
+    staleness). The L1 delta is only materialized for convergence='tol'
+    programs (a zero scalar otherwise).
     """
+    p = val.shape[0]
     start = val if count_ref is None else count_ref
-    val2, iters = _local_min_fixpoint(prog, sub, val, inner_cap, backend, interpret)
+
+    # 1. local compute. Fixpoint programs carry the value itself; sweep
+    # programs carry the per-vertex partial aggregate (one sweep = one
+    # inner iteration of comp work per worker).
+    if prog.local == "fixpoint":
+        state, iters = _local_fixpoint(prog, sub, val, inner_cap, backend, interpret)
+    else:
+        state = _local_sweep(prog, sub, val, backend, interpret)
+        iters = jnp.ones((p,), jnp.int32)
     if not do_exchange:  # bounded-staleness local step (straggler mitigation)
-        return val2, jnp.zeros((val.shape[0],), jnp.int32), iters
+        return state, jnp.zeros((p,), jnp.int32), iters, jnp.float32(0.0)
 
-    # mirror → master (forward): send current values of mirror slots.
-    S = _gather_rows(val2, sub.send_idx)  # [i, j, m]
-    changed = val2 != start
-    ch_send = jnp.take_along_axis(changed, sub.send_idx.reshape(val.shape[0], -1), axis=1).reshape(
-        sub.send_idx.shape
-    )
-    msgs_fwd = jnp.sum(ch_send & sub.msg_mask, axis=(1, 2))
+    # 2. mirror → master (forward): send current state of mirror slots.
+    S = _gather_rows(state, sub.send_idx)  # [i, j, m]
+    if prog.message_policy == "delta":
+        changed = state != start
+        ch_send = jnp.take_along_axis(changed, sub.send_idx.reshape(p, -1), axis=1).reshape(
+            sub.send_idx.shape
+        )
+        msgs_fwd = jnp.sum(ch_send & sub.msg_mask, axis=(1, 2))
+    else:
+        msgs_fwd = jnp.sum(sub.msg_mask, axis=(1, 2))
     R = exchange(S)  # receiver-rowed [j, i, m]
-    val3 = _scatter_min(val2, sub.recv_idx, jnp.where(sub.recv_mask, R, prog.inf))
+    upd = jnp.where(sub.recv_mask, R, prog.identity)
+    if prog.combine == "sum":
+        combined = _scatter_add(state, sub.recv_idx, upd)
+    else:
+        combined = _scatter_min(state, sub.recv_idx, upd)
 
-    # master → mirror (broadcast): masters push combined value back.
-    B = _gather_rows(val3, sub.recv_idx)  # [j, i, m] master values
-    ch_master = val3 != start
-    ch_b = jnp.take_along_axis(
-        ch_master, sub.recv_idx.reshape(val.shape[0], -1), axis=1
-    ).reshape(sub.recv_idx.shape)
-    msgs_bwd = jnp.sum(ch_b & sub.recv_mask, axis=(1, 2))
+    # 3. apply at masters, then master → mirror (broadcast).
+    new_val = _apply_step(prog, sub, combined, num_vertices)
+    B = _gather_rows(new_val, sub.recv_idx)  # [j, i, m] master values
+    if prog.message_policy == "delta":
+        ch_master = new_val != start
+        ch_b = jnp.take_along_axis(
+            ch_master, sub.recv_idx.reshape(p, -1), axis=1
+        ).reshape(sub.recv_idx.shape)
+        msgs_bwd = jnp.sum(ch_b & sub.recv_mask, axis=(1, 2))
+    else:
+        msgs_bwd = jnp.sum(sub.recv_mask, axis=(1, 2))
     Rb = exchange(B)  # sender-rowed view at mirrors: [i, j, m]
     idx_masked = jnp.where(sub.msg_mask, sub.send_idx, sub.max_v)
-    val4 = _scatter_set(val3, idx_masked, Rb)
+    out = _scatter_set(new_val, idx_masked, Rb)
 
-    return val4, msgs_fwd + msgs_bwd, iters
-
-
-# --------------------------------------------------------------- PageRank
-
-
-def _pr_superstep(
-    sub: SubgraphSet, rank, exchange, damping: float, num_vertices: int, backend: str = "xla"
-):
-    """One PageRank (power-iteration) superstep."""
-    p = rank.shape[0]
-    nseg = sub.max_v + 1
-    outdeg = jnp.concatenate([sub.out_degree, jnp.ones((p, 1), jnp.float32)], axis=1)
-    share = jnp.where(outdeg > 0, rank / outdeg, 0.0)
-    if backend == "xla":
-        data = jnp.take_along_axis(share, sub.lsrc, axis=1)
-        data = jnp.where(sub.edge_mask, data, 0.0)
-        partial = jax.vmap(
-            lambda d, s: jax.ops.segment_sum(d, s, num_segments=nseg, indices_are_sorted=True)
-        )(data, sub.ldst)
+    if prog.convergence == "tol":
+        delta = jnp.abs(out[:, : sub.max_v] - val[:, : sub.max_v]).sum()
     else:
-        # sum-times segment reduce: padded edges carry scale=0 (sum identity).
-        scale = sub.edge_mask.astype(jnp.float32)
-        partial = jax.vmap(
-            functools.partial(ops.segment_sum_scaled, num_out=nseg, impl=backend),
-            in_axes=(0, 0, 0, 0),
-        )(sub.lsrc, sub.ldst, scale, share)
-
-    # mirror partials → master (sum), then master computes the new rank.
-    S = _gather_rows(partial, sub.send_idx)
-    msgs_fwd = jnp.sum(sub.msg_mask, axis=(1, 2))  # PR sends every superstep
-    R = exchange(S)
-    total = _scatter_add(partial, sub.recv_idx, jnp.where(sub.recv_mask, R, 0.0))
-    base = (1.0 - damping) / num_vertices
-    new_rank = jnp.where(sub.is_master, base + damping * total[:, : sub.max_v], 0.0)
-    new_rank = jnp.concatenate([new_rank, jnp.zeros((p, 1), jnp.float32)], axis=1)
-
-    # broadcast master rank → mirrors.
-    B = _gather_rows(new_rank, sub.recv_idx)
-    msgs_bwd = jnp.sum(sub.recv_mask, axis=(1, 2))
-    Rb = exchange(B)
-    idx_masked = jnp.where(sub.msg_mask, sub.send_idx, sub.max_v)
-    new_rank = _scatter_set(new_rank, idx_masked, Rb)
-    delta = jnp.abs(new_rank[:, : sub.max_v] - rank[:, : sub.max_v]).sum()
-    return new_rank, msgs_fwd + msgs_bwd, delta
+        delta = jnp.float32(0.0)
+    return out, msgs_fwd + msgs_bwd, iters, delta
 
 
-def check_int32_kernel_labels(prog: MinProgram, sub: SubgraphSet, compute_backend: str) -> None:
-    """Refuse kernel backends for int32 programs with labels >= 2^24.
+def check_int32_kernel_labels(prog: VertexProgram, sub: SubgraphSet, compute_backend: str) -> None:
+    """Refuse kernel backends for int32 programs with values >= 2^24.
 
-    The kernel path runs the int32 min-semiring in f32, which is only exact
-    for labels below 2^24 — larger ids would merge distinct CC components
-    silently. Both the sim and distributed drivers call this before
-    launching.
+    The kernel path runs the int32 semiring in f32, which is only exact for
+    magnitudes below 2^24 — larger values would merge distinct CC/REACH
+    labels (or BFS hop counts) silently. `max(gid)` bounds every int32
+    program's finite values: CC/REACH propagate the labels themselves, and
+    BFS hop counts are below the covered-vertex count <= max(gid)+1. Both
+    the sim and distributed drivers call this before launching.
     """
     check_compute_backend(compute_backend)
     if compute_backend != "xla" and prog.dtype == "int32":
@@ -345,55 +598,44 @@ def _sim_exchange(S: jax.Array) -> jax.Array:
     return jnp.swapaxes(S, 0, 1)
 
 
-def init_cc(sub: SubgraphSet) -> jax.Array:
-    p = sub.gid.shape[0]
-    val = jnp.where(sub.vmask, sub.gid, INF_I32)
-    return jnp.concatenate([val, jnp.full((p, 1), INF_I32, jnp.int32)], axis=1)
+@functools.partial(
+    jax.jit, static_argnames=("prog", "inner_cap", "do_exchange", "num_vertices", "backend")
+)
+def _jit_superstep_sim(prog, sub, val, inner_cap, do_exchange, count_ref, num_vertices=0, backend="xla"):
+    return _superstep(
+        prog, sub, val, _sim_exchange, inner_cap, do_exchange, count_ref, num_vertices, backend
+    )
 
 
-def init_sssp(sub: SubgraphSet, source: int) -> jax.Array:
-    p = sub.gid.shape[0]
-    val = jnp.where(sub.gid == source, 0.0, INF_F32).astype(jnp.float32)
-    return jnp.concatenate([val, jnp.full((p, 1), INF_F32, jnp.float32)], axis=1)
-
-
-def init_pr(sub: SubgraphSet, num_vertices: int) -> jax.Array:
-    p = sub.gid.shape[0]
-    # Mirrors start with the same 1/N as masters (broadcast of the init) —
-    # every present vertex replica holds the global initial rank.
-    val = jnp.where(sub.vmask, 1.0 / num_vertices, 0.0).astype(jnp.float32)
-    return jnp.concatenate([val, jnp.zeros((p, 1), jnp.float32)], axis=1)
-
-
-@functools.partial(jax.jit, static_argnames=("prog", "inner_cap", "do_exchange", "backend"))
-def _jit_min_superstep_sim(prog, sub, val, inner_cap, do_exchange, count_ref, backend="xla"):
-    return _min_superstep(prog, sub, val, _sim_exchange, inner_cap, do_exchange, count_ref, backend)
-
-
-@functools.partial(jax.jit, static_argnames=("damping", "num_vertices", "backend"))
-def _jit_pr_superstep_sim(sub, rank, damping, num_vertices, backend="xla"):
-    return _pr_superstep(sub, rank, _sim_exchange, damping, num_vertices, backend)
-
-
-# ------------------------------------------------------ fused sim drivers
+# ------------------------------------------------------- fused sim driver
 #
-# The host drivers below dispatch one device program per superstep and sync
-# after each one (np.asarray of the message counts, the convergence bool).
-# The fused drivers run the WHOLE BSP loop inside one jitted lax.while_loop:
-# per-step stats land in preallocated [max_supersteps, p] on-device buffers,
-# convergence exits the loop inside the trace, the value carry is donated,
-# and the host syncs exactly once per run to fetch (steps, stats).
+# The host loop in `run_bsp` dispatches one device program per superstep and
+# syncs after each one (np.asarray of the message counts, the convergence
+# check). The fused driver runs the WHOLE BSP loop inside one jitted
+# lax.while_loop: per-step stats land in preallocated [max_supersteps, p]
+# on-device buffers, convergence exits the loop inside the trace, the value
+# carry is donated, and the host syncs exactly once per run to fetch
+# (steps, stats).
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("prog", "max_supersteps", "inner_cap", "exchange_period", "backend"),
+    static_argnames=("prog", "max_supersteps", "inner_cap", "exchange_period", "tol",
+                     "num_vertices", "backend"),
     donate_argnums=(1,),
 )
-def _fused_min_bsp(sub, val, *, prog, max_supersteps, inner_cap, exchange_period, backend):
+def _fused_bsp(sub, val, *, prog, max_supersteps, inner_cap, exchange_period, tol,
+               num_vertices, backend):
     p = val.shape[0]
     msgs_buf = jnp.zeros((max_supersteps, p), jnp.int32)
     iters_buf = jnp.zeros((max_supersteps, p), jnp.int32)
+
+    def converged_flag(v, v2, do_ex, delta):
+        if prog.convergence == "tol":
+            return (delta < tol) if tol else jnp.bool_(False)
+        # Converged only when an exchange round produced no change anywhere
+        # (identical to the host driver's break condition).
+        return do_ex & ~jnp.any(v2 != v)
 
     def cond(carry):
         _, _, k, done, _, _ = carry
@@ -404,22 +646,24 @@ def _fused_min_bsp(sub, val, *, prog, max_supersteps, inner_cap, exchange_period
         if exchange_period == 1:
             # Static specialization of the common case: every step exchanges,
             # so the trace needs no branch or last-exchange select.
-            v2, msgs, iters = _min_superstep(
-                prog, sub, v, _sim_exchange, inner_cap, True, last_ex, backend
+            v2, msgs, iters, delta = _superstep(
+                prog, sub, v, _sim_exchange, inner_cap, True, last_ex, num_vertices, backend
             )
-            converged = ~jnp.any(v2 != v)
+            converged = converged_flag(v, v2, jnp.bool_(True), delta)
             last_ex = v2
         else:
             do_ex = (k % exchange_period) == (exchange_period - 1)
-            v2, msgs, iters = jax.lax.cond(
+            v2, msgs, iters, delta = jax.lax.cond(
                 do_ex,
-                lambda v_, le: _min_superstep(prog, sub, v_, _sim_exchange, inner_cap, True, le, backend),
-                lambda v_, le: _min_superstep(prog, sub, v_, _sim_exchange, inner_cap, False, le, backend),
+                lambda v_, le: _superstep(
+                    prog, sub, v_, _sim_exchange, inner_cap, True, le, num_vertices, backend
+                ),
+                lambda v_, le: _superstep(
+                    prog, sub, v_, _sim_exchange, inner_cap, False, le, num_vertices, backend
+                ),
                 v, last_ex,
             )
-            # Converged only when an exchange round produced no change
-            # anywhere (identical to the host driver's break condition).
-            converged = do_ex & ~jnp.any(v2 != v)
+            converged = converged_flag(v, v2, do_ex, delta)
             last_ex = jnp.where(do_ex, v2, last_ex)
         return (v2, last_ex, k + 1, converged, msgs_buf.at[k].set(msgs), iters_buf.at[k].set(iters))
 
@@ -430,33 +674,8 @@ def _fused_min_bsp(sub, val, *, prog, max_supersteps, inner_cap, exchange_period
     return val, steps, msgs_buf, iters_buf, edges
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("damping", "num_vertices", "num_iters", "tol", "backend"),
-    donate_argnums=(1,),
-)
-def _fused_pagerank(sub, rank, *, damping, num_vertices, num_iters, tol, backend):
-    p = rank.shape[0]
-    msgs_buf = jnp.zeros((num_iters, p), jnp.int32)
-
-    def cond(carry):
-        _, k, done, _ = carry
-        return ~done & (k < num_iters)
-
-    def body(carry):
-        r, k, _, msgs_buf = carry
-        r2, msgs, delta = _pr_superstep(sub, r, _sim_exchange, damping, num_vertices, backend)
-        done = (delta < tol) if tol else jnp.bool_(False)
-        return r2, k + 1, done, msgs_buf.at[k].set(msgs)
-
-    rank, steps, _, msgs_buf = jax.lax.while_loop(
-        cond, body, (rank, jnp.int32(0), jnp.bool_(False), msgs_buf)
-    )
-    edges = jnp.sum(sub.edge_mask, axis=1, dtype=jnp.int32)
-    return rank, steps, msgs_buf, edges
-
-
-def _min_stats(steps: int, msgs_sw: np.ndarray, iters_sw: np.ndarray, edges: np.ndarray) -> BSPStats:
+def _assemble_stats(steps: int, msgs_sw: np.ndarray, iters_sw: np.ndarray,
+                    edges: np.ndarray) -> BSPStats:
     return BSPStats(
         supersteps=steps,
         messages_per_worker=msgs_sw.sum(axis=0),
@@ -467,56 +686,94 @@ def _min_stats(steps: int, msgs_sw: np.ndarray, iters_sw: np.ndarray, edges: np.
     )
 
 
-def run_min_bsp(
+def check_pagerank_num_vertices(prog: VertexProgram, num_vertices: int) -> None:
+    """pagerank-apply programs renormalize by the GLOBAL vertex count at
+    trace time — fail with a named argument, not a ZeroDivisionError."""
+    if prog.apply == "pagerank" and num_vertices <= 0:
+        raise ValueError(
+            f"program {prog.name!r} renormalizes by the global vertex count: "
+            "pass num_vertices= (GraphPipeline supplies graph.num_vertices)"
+        )
+
+
+def run_bsp(
     sub: SubgraphSet,
-    prog: MinProgram,
-    init_val: jax.Array,
+    program,
+    init_val: Optional[jax.Array] = None,
     *,
-    max_supersteps: int = 200,
+    max_supersteps: Optional[int] = None,
     inner_cap: int = 10_000,
     exchange_period: int = 1,
+    tol: float = 0.0,
+    num_vertices: int = 0,
+    source=None,
     compute_backend: str = "xla",
     driver: str = "fused",
 ) -> tuple[jax.Array, BSPStats]:
-    """Simulation-mode driver for CC/SSSP. exchange_period>1 = bounded staleness.
+    """THE simulation-mode driver: runs any `VertexProgram` (instance or
+    registered name). exchange_period>1 = bounded staleness (fixpoint
+    programs only).
 
-    compute_backend selects the local-relaxation implementation (see
-    repro.api.config.COMPUTE_BACKENDS); all backends converge to the same
-    fixpoint. driver="fused" runs the whole loop as one device program;
-    driver="host" dispatches one superstep per Python iteration (identical
-    values and stats — tests/test_drivers.py pins the equivalence).
+    init_val defaults to the program's own `init_fn` (pass `source=` /
+    `num_vertices=` as the program needs). max_supersteps=None takes the
+    program's `default_steps` budget (PR: 20), else 200. compute_backend
+    selects the
+    local-compute implementation (see repro.api.config.COMPUTE_BACKENDS);
+    all backends converge to the same fixpoint. driver="fused" runs the
+    whole loop as one device program; driver="host" dispatches one
+    superstep per Python iteration (identical values and stats —
+    tests/test_drivers.py pins the equivalence). `tol` is the L1 step-delta
+    convergence threshold for convergence='tol' programs (0 = run all
+    max_supersteps, PageRank's fixed-iteration mode).
 
-    driver="fused" DONATES init_val to the device program (that is where
-    the fused loop's zero-copy value carry starts): on accelerators the
-    caller's buffer is consumed, so build a fresh init per run (as
-    repro.graph.algorithms does) rather than reusing one across calls.
+    driver="fused" DONATES the initial value buffer to the device program
+    (that is where the fused loop's zero-copy value carry starts): on
+    accelerators the caller's buffer is consumed, so build a fresh init per
+    run (as repro.graph.algorithms does) rather than reusing one across
+    calls.
     """
+    prog = get_program(program)
     check_int32_kernel_labels(prog, sub, compute_backend)
+    check_pagerank_num_vertices(prog, num_vertices)
     check_driver(driver)
-    p = init_val.shape[0]
+    if max_supersteps is None:
+        max_supersteps = prog.default_steps or 200
+    if exchange_period > 1 and (prog.local != "fixpoint" or prog.convergence != "no_change"):
+        raise ValueError(
+            f"exchange_period>1 (bounded staleness) needs a fixpoint/no-change program; "
+            f"{prog.name!r} is local={prog.local!r}, convergence={prog.convergence!r}"
+        )
+    if init_val is None:
+        init_val = prog.init(sub, num_vertices=num_vertices, source=source)
+    # Max-combine runs as min over negated values (kernel reuse); delta
+    # message counts and no-change convergence are negation-invariant.
+    exec_prog, negate = _exec_view(prog)
+    val = -init_val if negate else init_val
+    p = val.shape[0]
 
     if driver == "fused":
-        val, steps, msgs_buf, iters_buf, edges = _fused_min_bsp(
+        val, steps, msgs_buf, iters_buf, edges = _fused_bsp(
             sub,
-            init_val,
-            prog=prog,
+            val,
+            prog=exec_prog,
             max_supersteps=max_supersteps,
             inner_cap=inner_cap,
             exchange_period=exchange_period,
+            tol=tol,
+            num_vertices=num_vertices,
             backend=compute_backend,
         )
         DISPATCH_COUNTS["fused"] += 1
         # The run's single host sync: one device_get for every stat buffer.
         steps, msgs_sw, iters_sw, edges = jax.device_get((steps, msgs_buf, iters_buf, edges))
         steps = int(steps)
-        return val, _min_stats(
+        return (-val if negate else val), _assemble_stats(
             steps,
             msgs_sw[:steps].astype(np.int64),
             iters_sw[:steps].astype(np.int64),
             edges.astype(np.int64),
         )
 
-    val = init_val
     msg_steps = []
     iters_steps = []
     edges = np.asarray(sub.edge_mask.sum(axis=1), np.int64)
@@ -525,8 +782,9 @@ def run_min_bsp(
     for k in range(max_supersteps):
         do_exchange = (k % exchange_period) == exchange_period - 1
         before = val
-        val, msgs, iters = _jit_min_superstep_sim(
-            prog, sub, val, inner_cap, do_exchange, last_exchanged, compute_backend
+        val, msgs, iters, delta = _jit_superstep_sim(
+            exec_prog, sub, val, inner_cap, do_exchange, last_exchanged,
+            num_vertices, compute_backend,
         )
         DISPATCH_COUNTS["host"] += 1
         if do_exchange:
@@ -534,66 +792,15 @@ def run_min_bsp(
         steps += 1
         msg_steps.append(np.asarray(msgs, np.int64))
         iters_steps.append(np.asarray(iters, np.int64))
+        if prog.convergence == "tol":
+            if tol and float(delta) < tol:
+                break
         # Converged only when an exchange round produced no change anywhere.
-        if do_exchange and not bool(jnp.any(val != before)):
+        elif do_exchange and not bool(jnp.any(val != before)):
             break
     msgs_sw = np.asarray(msg_steps).reshape(steps, p)
     iters_sw = np.asarray(iters_steps).reshape(steps, p)
-    return val, _min_stats(steps, msgs_sw, iters_sw, edges)
-
-
-def run_pagerank(
-    sub: SubgraphSet,
-    num_vertices: int,
-    *,
-    damping: float = 0.85,
-    num_iters: int = 20,
-    tol: float = 0.0,
-    compute_backend: str = "xla",
-    driver: str = "fused",
-) -> tuple[jax.Array, BSPStats]:
-    check_compute_backend(compute_backend)
-    check_driver(driver)
-    rank = init_pr(sub, num_vertices)
-    p = rank.shape[0]
-
-    if driver == "fused":
-        rank, steps, msgs_buf, edges = _fused_pagerank(
-            sub,
-            rank,
-            damping=damping,
-            num_vertices=num_vertices,
-            num_iters=num_iters,
-            tol=tol,
-            backend=compute_backend,
-        )
-        DISPATCH_COUNTS["fused"] += 1
-        steps, msgs_sw, edges = jax.device_get((steps, msgs_buf, edges))
-        steps = int(steps)
-        msgs_sw = msgs_sw[:steps].astype(np.int64)
-        edges = edges.astype(np.int64)
-    else:
-        msg_steps = []
-        edges = np.asarray(sub.edge_mask.sum(axis=1), np.int64)
-        steps = 0
-        for _ in range(num_iters):
-            rank, msgs, delta = _jit_pr_superstep_sim(
-                sub, rank, damping, num_vertices, compute_backend
-            )
-            DISPATCH_COUNTS["host"] += 1
-            steps += 1
-            msg_steps.append(np.asarray(msgs, np.int64))
-            if tol and float(delta) < tol:
-                break
-        msgs_sw = np.asarray(msg_steps).reshape(steps, p)
-    return rank, BSPStats(
-        supersteps=steps,
-        messages_per_worker=msgs_sw.sum(axis=0),
-        messages_per_step=msgs_sw.sum(axis=1),
-        comp_work_per_worker=edges * steps,
-        inner_iters_per_step=np.ones((steps, p), np.int64),
-        messages_per_step_worker=msgs_sw,
-    )
+    return (-val if negate else val), _assemble_stats(steps, msgs_sw, iters_sw, edges)
 
 
 # ------------------------------------------------- distributed (shard_map)
@@ -617,14 +824,17 @@ def subgraphs_to_arrays(sub: SubgraphSet) -> tuple[dict, dict]:
 def make_distributed_stepper(
     mesh,
     axes,
-    prog: MinProgram,
+    prog,
     statics: dict,
     *,
     num_supersteps: int,
     inner_cap: int,
+    tol: float = 0.0,
+    num_vertices: int = 0,
     compute_backend: str = "xla",
 ):
-    """Builds a shard_map'd BSP runner: subgraphs sharded 1:1 over `axes`.
+    """Builds a shard_map'd BSP runner for ANY `VertexProgram`: subgraphs
+    sharded 1:1 over `axes`.
 
     `axes` may be a single mesh axis name or a tuple (e.g. ("pod","data",
     "model")) whose sizes multiply to the number of subgraphs — this is what
@@ -633,12 +843,16 @@ def make_distributed_stepper(
     sharding specs form a clean pytree.
 
     Like the fused sim driver, the step loop is a lax.while_loop that exits
-    as soon as a superstep changes nothing on any device (global flag via
-    psum) and records per-step message/inner-iteration stats in
-    [num_supersteps, local] device buffers. Returns
+    on GLOBAL convergence — for no-change programs a psum'd change flag, for
+    tol programs the psum'd L1 step delta against `tol` — and records
+    per-step message/inner-iteration stats in [num_supersteps, local] device
+    buffers. Callers always work in the program's true value domain:
+    max-combine programs are negated in and out here. Returns
     (val, msgs_total, steps, msgs_per_step, iters_per_step).
     """
+    prog = get_program(prog)
     check_compute_backend(compute_backend)
+    check_pagerank_num_vertices(prog, num_vertices)
     # Pallas interpret vs compiled is keyed off the MESH platform, not the
     # host process backend: AOT-lowering for a TPU mesh from a CPU host must
     # bake in the compiled kernel, not the interpreter.
@@ -647,6 +861,7 @@ def make_distributed_stepper(
     except AttributeError:  # abstract/mock meshes: fall back to the host sniff
         mesh_platform = None
     interpret = None if mesh_platform is None else mesh_platform != "tpu"
+    exec_prog, negate = _exec_view(prog)
     axis_tuple = axes if isinstance(axes, tuple) else (axes,)
     spec3 = P(axis_tuple, None, None)
     spec2 = P(axis_tuple, None)
@@ -669,23 +884,36 @@ def make_distributed_stepper(
 
         def body(carry):
             v, k, _, msgs_buf, iters_buf = carry
-            v2, m, it = _min_superstep(
-                prog, sub, v, a2a_exchange, inner_cap,
-                backend=compute_backend, interpret=interpret,
+            v2, m, it, delta = _superstep(
+                exec_prog, sub, v, a2a_exchange, inner_cap,
+                num_vertices=num_vertices, backend=compute_backend, interpret=interpret,
             )
-            # Convergence is global: psum the per-device change flag so every
+            # Convergence is global: psum the per-device signal so every
             # device takes the same trip count (collectives stay uniform).
-            changed = jax.lax.psum(jnp.any(v2 != v).astype(jnp.int32), axis_tuple)
-            return v2, k + 1, changed == 0, msgs_buf.at[k].set(m), iters_buf.at[k].set(it)
+            if prog.convergence == "tol":
+                gdelta = jax.lax.psum(delta, axis_tuple)
+                done = (gdelta < tol) if tol else jnp.bool_(False)
+            else:
+                changed = jax.lax.psum(jnp.any(v2 != v).astype(jnp.int32), axis_tuple)
+                done = changed == 0
+            return v2, k + 1, done, msgs_buf.at[k].set(m), iters_buf.at[k].set(it)
 
         val_out, steps, _, msgs_buf, iters_buf = jax.lax.while_loop(
             cond, body, (val, jnp.int32(0), jnp.bool_(False), msgs_buf, iters_buf)
         )
         return val_out, msgs_buf.sum(axis=0), steps, msgs_buf, iters_buf
 
-    return shard_map_compat(
+    sharded = shard_map_compat(
         stepper,
         mesh=mesh,
         in_specs=in_specs,
         out_specs=(spec2, P(axis_tuple), P(), P(None, axis_tuple), P(None, axis_tuple)),
     )
+    if not negate:
+        return sharded
+
+    def negated(arrays: dict, val: jax.Array):
+        out, msgs, steps, msgs_b, iters_b = sharded(arrays, -val)
+        return -out, msgs, steps, msgs_b, iters_b
+
+    return negated

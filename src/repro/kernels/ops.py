@@ -102,6 +102,24 @@ def segment_sum_scaled(
     )
 
 
+def segment_max(
+    lsrc, ldst, weight, val, *, num_out: int,
+    impl: str | None = None, block_e: int = 512, interpret: bool | None = None,
+):
+    """out[d] = max(val[d], max_{e: dst=d} val[src_e]); dst-sorted edges.
+
+    The max-combine entry point for max-semiring programs (e.g. the
+    engine's reachability). It runs on the SAME min-plus kernels via
+    negation — no separate Pallas kernel to maintain. `weight` is the pad
+    carrier only: real edges must hold 0, padded edges the min identity
+    INF (so they contribute nothing in the negated domain).
+    """
+    return -segment_min_plus(
+        lsrc, ldst, weight, -val, num_out=num_out, impl=impl, block_e=block_e,
+        interpret=interpret,
+    )
+
+
 def ebg_membership(
     keep_bits, u, v, *, impl: str | None = None, block_e: int = 512, interpret: bool | None = None,
 ):

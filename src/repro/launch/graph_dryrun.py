@@ -14,9 +14,12 @@ from __future__ import annotations
 
 from repro.api import GraphPipeline, SubgraphSpec
 from repro.compat import cost_analysis_compat
-from repro.graph.engine import CC
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import parse_collectives, roofline_terms
+
+# Friendster |V| — abstract (shape-only) lowering has no graph to read it
+# from, and renormalizing programs (PageRank) need it at trace time.
+FRIENDSTER_NUM_VERTICES = 65_608_366
 
 
 def friendster_spec(p: int, max_v: int = 1 << 20, max_e: int = 8 << 20, max_msg: int = 2048) -> SubgraphSpec:
@@ -29,12 +32,16 @@ def run_graph_dryrun(
     num_supersteps: int = 4,
     inner_cap: int = 64,
     compute_backend: str = "xla",
+    program: str = "cc",
 ):
+    """Lower the distributed stepper for any registered `VertexProgram`
+    (`program="cc" | "sssp" | "pr" | "bfs" | "reach"`) at production scale."""
     mesh = make_production_mesh(multi_pod=multi_pod)
     axes = tuple(mesh.axis_names)  # subgraphs over ALL axes: p == #chips
     p = len(mesh.devices.reshape(-1))
     low = GraphPipeline.from_spec(friendster_spec(p)).lower(
-        mesh=mesh, axes=axes, program=CC, num_supersteps=num_supersteps, inner_cap=inner_cap,
+        mesh=mesh, axes=axes, program=program, num_supersteps=num_supersteps,
+        inner_cap=inner_cap, num_vertices=FRIENDSTER_NUM_VERTICES,
         compute_backend=compute_backend,
     )
     mem = low.compiled.memory_analysis()
@@ -44,7 +51,7 @@ def run_graph_dryrun(
     hbm = float(cost.get("bytes accessed", 0.0))
     terms = roofline_terms(flops, hbm, coll.total_link_bytes)
     return dict(
-        arch="graph_bsp_cc",
+        arch=f"graph_bsp_{low.program}",
         compute_backend=compute_backend,
         shape=f"p{p}_friendster_scale",
         mesh="2x16x16" if multi_pod else "16x16",

@@ -197,16 +197,33 @@ def test_pipeline_run_programs(tiny_powerlaw):
         pipe.run("cc", mode="warp")
 
 
-def test_stock_min_programs_accepted_custom_rejected(tiny_powerlaw):
-    from repro.graph.engine import CC, SSSP, MinProgram
+def test_program_instances_accepted_initless_rejected(tiny_powerlaw):
+    """`.run` takes registered names OR VertexProgram instances; an instance
+    without an init_fn cannot produce initial values through the facade."""
+    from repro.graph.engine import CC, SSSP, VertexProgram
 
     pipe = GraphPipeline(tiny_powerlaw).partition("ebg", parts=4)
     by_obj = pipe.run(CC)
     by_name = pipe.run("cc")
     np.testing.assert_array_equal(by_obj.values, by_name.values)
     assert pipe.run(SSSP).program == "sssp"
-    with pytest.raises(ValueError, match="unsupported MinProgram"):
-        pipe.run(MinProgram("bfs", use_weight=False, bidirectional=False, dtype="int32"))
+    with pytest.raises(ValueError, match="init_fn"):
+        pipe.run(VertexProgram(name="custom_noinit", dtype="int32"))
+
+
+def test_graph_validate_raises_value_error():
+    """Graph.validate raises ValueError naming the offending field (it used
+    bare `assert`s that vanish under `python -O`)."""
+    from repro.core.types import Graph
+
+    src = np.array([0, 1], np.int32)
+    Graph(src=src, dst=np.array([1, 0], np.int32), num_vertices=2).validate()
+    with pytest.raises(ValueError, match="dst.*num_vertices"):
+        Graph(src=src, dst=np.array([1, 7], np.int32), num_vertices=2).validate()
+    with pytest.raises(ValueError, match="src has negative"):
+        Graph(src=np.array([-1, 0], np.int32), dst=src, num_vertices=2).validate()
+    with pytest.raises(ValueError, match="same shape"):
+        Graph(src=src, dst=np.array([0], np.int32), num_vertices=2).validate()
 
 
 def test_pipeline_requires_partition_stage(tiny_powerlaw):
