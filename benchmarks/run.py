@@ -19,7 +19,9 @@ def main(argv=None) -> None:
     # Names are validated against the repro.api registry after parsing, so
     # `--help` / usage errors stay import-cheap (no jax load).
     ap.add_argument("--partitioners", nargs="+", metavar="NAME", default=None,
-                    help="registry subset (default: every benchmark_default partitioner)")
+                    help="registry subset, e.g. ebg hdrf greedy dbh "
+                         "(default: every benchmark_default partitioner, which "
+                         "includes the streaming-scorer baselines hdrf/greedy)")
     ap.add_argument("--compute-backends", nargs="+", metavar="BACKEND", default=["xla"],
                     help="engine hot-path impls to run (xla | ref | pallas); more than "
                          "one A/Bs the runtime section per backend and records the speedup")

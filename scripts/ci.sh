@@ -8,17 +8,18 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 python -m pytest -x -q "$@"
 if [ "$#" -gt 0 ]; then
-  # Extra args may have filtered out the backend-parity and VertexProgram
-  # suites (xla vs ref vs pallas-interpret engine, chunked EBG bitset,
-  # BFS/reach oracles, distributed PageRank) — always run them, so an
-  # engine regression fails loudly in every invocation mode. The no-arg
-  # run above already includes them.
-  python -m pytest -q tests/test_backends.py tests/test_programs.py
+  # Extra args may have filtered out the backend-parity, VertexProgram,
+  # and streaming-scorer suites (xla vs ref vs pallas-interpret engine,
+  # chunked bitset + EdgeScorer scan/chunked/oracle parity, BFS/reach
+  # oracles, distributed PageRank) — always run them, so an engine or
+  # partitioner regression fails loudly in every invocation mode. The
+  # no-arg run above already includes them.
+  python -m pytest -q tests/test_backends.py tests/test_programs.py tests/test_streaming.py
 else
   # Benchmark smoke: partition -> build -> engine at p=32, emitting
-  # BENCH_pipeline.json (partition/build walls, per-program supersteps/s
-  # and messages for every registered VertexProgram, host-vs-fused driver
-  # comparison, distributed-PageRank section) so the perf trajectory is
-  # tracked.
+  # BENCH_pipeline.json (partition/build walls, Table-III quality row per
+  # streaming EdgeScorer, per-program supersteps/s and messages for every
+  # registered VertexProgram, host-vs-fused driver comparison,
+  # distributed-PageRank section) so the perf trajectory is tracked.
   python -m benchmarks.pipeline_smoke
 fi

@@ -16,7 +16,9 @@ from repro.api.config import (
     COMPUTE_BACKENDS,
     EBGConfig,
     EBVConfig,
+    GreedyConfig,
     HashConfig,
+    HDRFConfig,
     MetisLikeConfig,
     NEConfig,
     PartitionerConfig,
@@ -40,6 +42,8 @@ __all__ = [
     "check_compute_backend",
     "EBGConfig",
     "EBVConfig",
+    "GreedyConfig",
+    "HDRFConfig",
     "HashConfig",
     "MetisLikeConfig",
     "NEConfig",

@@ -97,6 +97,60 @@ class EBGConfig(PartitionerConfig):
 EBVConfig = EBGConfig
 
 
+def _validate_streaming_knobs(cfg) -> None:
+    """Shared validation for the chunked streaming-scorer knobs."""
+    _require(
+        isinstance(cfg.eps, (int, float)) and math.isfinite(cfg.eps) and cfg.eps > 0,
+        f"eps must be finite and > 0, got {cfg.eps!r}",
+    )
+    _require(
+        isinstance(cfg.block, int) and not isinstance(cfg.block, bool) and cfg.block >= 1,
+        f"block must be a positive int, got {cfg.block!r}",
+    )
+    _require(isinstance(cfg.sort_edges, bool), f"sort_edges must be a bool, got {cfg.sort_edges!r}")
+    check_compute_backend(cfg.compute_backend)
+
+
+@dataclasses.dataclass(frozen=True)
+class HDRFConfig(PartitionerConfig):
+    """HDRF knobs [Petroni et al., CIKM'15] on the streaming EdgeScorer core.
+
+    `lam` weights the balance term against the degree-weighted replication
+    term; `eps` is the balance normalizer's epsilon (1/(eps + max-min));
+    `block`/`compute_backend` size and route the chunked commit loop
+    (block=1 is the faithful sequential stream); `sort_edges` optionally
+    applies the EBV degree-sum ordering (off by default — HDRF streams in
+    input order).
+    """
+
+    lam: float = 1.0
+    eps: float = 1.0
+    block: int = 256
+    sort_edges: bool = False
+    compute_backend: str = "xla"
+
+    def validate(self) -> None:
+        _require(
+            isinstance(self.lam, (int, float)) and math.isfinite(self.lam) and self.lam > 0,
+            f"lam must be finite and > 0, got {self.lam!r}",
+        )
+        _validate_streaming_knobs(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class GreedyConfig(PartitionerConfig):
+    """PowerGraph Greedy knobs [Gonzalez et al., OSDI'12] on the streaming
+    EdgeScorer core. Same knobs as HDRF minus the degree term's lambda."""
+
+    eps: float = 1.0
+    block: int = 256
+    sort_edges: bool = False
+    compute_backend: str = "xla"
+
+    def validate(self) -> None:
+        _validate_streaming_knobs(self)
+
+
 @dataclasses.dataclass(frozen=True)
 class HashConfig(PartitionerConfig):
     """Hash-family baselines (random edge hash, DBH, CVC)."""

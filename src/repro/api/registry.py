@@ -50,6 +50,7 @@ class PartitionerSpec:
     jit_compatible: bool = False  # core loop runs under jax.jit
     benchmark_default: bool = True  # included in the paper benchmark suite
     compute_backends: tuple = ("xla",)  # hot-path impls the algorithm accepts
+    scorer: Optional[str] = None  # streaming EdgeScorer name, if on that core
     description: str = ""
 
     @property
@@ -110,6 +111,7 @@ def register_partitioner(
     jit_compatible: bool = False,
     benchmark_default: bool = True,
     compute_backends: tuple = ("xla",),
+    scorer: Optional[str] = None,
     description: str = "",
 ):
     """Decorator: register `fn` under `name`. Returns `fn` unchanged, so
@@ -133,6 +135,7 @@ def register_partitioner(
             jit_compatible=jit_compatible,
             benchmark_default=benchmark_default,
             compute_backends=tuple(compute_backends),
+            scorer=scorer,
             description=desc,
         )
         return fn

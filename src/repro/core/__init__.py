@@ -4,10 +4,29 @@ Partitioner modules self-register with the `repro.api` registry at import
 time (see `repro.api.register_partitioner`). The `PARTITIONERS` dict
 below is a *derived* backwards-compatibility view of that registry — new
 code should use `repro.api.get_partitioner` / `GraphPipeline` instead.
+
+The streaming vertex-cut family (EBV/`ebg`, HDRF, Greedy) lives on the
+pluggable `EdgeScorer` core in `repro.core.streaming`, with one shared
+numpy oracle in `repro.core.streaming_np`.
 """
 from repro.api.registry import RegistryFunctionView
-from repro.core.ebg import ebg_partition, ebg_partition_chunked
-from repro.core.ebg_np import ebg_partition_np
+from repro.core.streaming import (
+    EBV,
+    GREEDY,
+    HDRF,
+    EdgeScorer,
+    ebg_partition,
+    ebg_partition_chunked,
+    get_scorer,
+    greedy_partition,
+    hdrf_partition,
+    list_scorers,
+    register_scorer,
+    scorer_names,
+    streaming_chunked_partition,
+    streaming_scan_partition,
+)
+from repro.core.streaming_np import ebg_partition_np, streaming_partition_np
 from repro.core.baselines import cvc_partition, dbh_partition, random_hash_partition
 from repro.core.ne import ne_partition
 from repro.core.metis_like import metis_like_partition
@@ -30,9 +49,22 @@ __all__ = [
     "PartitionResult",
     "PartitionMetrics",
     "PARTITIONERS",
+    "EdgeScorer",
+    "EBV",
+    "HDRF",
+    "GREEDY",
+    "register_scorer",
+    "get_scorer",
+    "scorer_names",
+    "list_scorers",
+    "streaming_scan_partition",
+    "streaming_chunked_partition",
+    "streaming_partition_np",
     "ebg_partition",
     "ebg_partition_chunked",
     "ebg_partition_np",
+    "hdrf_partition",
+    "greedy_partition",
     "dbh_partition",
     "cvc_partition",
     "ne_partition",

@@ -1,245 +1,20 @@
 """EBG — Efficient and Balanced Greedy edge partitioner (paper Algorithm 1).
 
-Faithful JAX implementation: a `jax.lax.scan` over the degree-sum-sorted
-edge stream. State is the `keep` membership bitset (p × V bool), and the
-running `e_count` / `v_count` per subgraph. Each step evaluates the paper's
-evaluation function
+Since the EdgeScorer refactor both EBG entry points live on the generic
+streaming core in `repro.core.streaming`: `ebg` is the faithful
+`lax.scan` stream and `ebg_chunked` the blocked throughput variant, each
+a stock instance of the `"ebv"` scorer (unit membership term + static
+p/|E|, p/|V| balance normalizers — the paper's evaluation function
 
     Score_(u,v)(i) = 1[u∉keep[i]] + 1[v∉keep[i]]
                    + alpha * e_count[i]/(|E|/p) + beta * v_count[i]/(|V|/p)
 
-over all p subgraphs at once (vectorized over i) and commits the argmin.
-Ties break toward the lowest subgraph index; the paper's Appendix-B example
-breaks its single tie the other way, so tests compare up to a relabeling of
-subgraph ids.
-
-`ebg_partition_chunked` is a BEYOND-PAPER throughput variant: scores for a
-block of B edges are evaluated against the block-start state in one
-vectorized pass (VPU/MXU-friendly), then assignments are committed exactly
-and sequentially *within* the block via a small fori_loop on (p,B)-local
-state. With B=1 it is exactly the faithful algorithm; with larger B the
-membership term inside a block is computed against slightly stale `keep`
-(the balance terms are exact), trading a small replication-factor increase
-for ~B× fewer scan steps. The paper names a distributed/online extension as
-future work — this is our step in that direction.
+minimized with ties toward the lowest subgraph index). Assignments are
+bit-identical to the pre-refactor hard-coded implementation; this module
+remains as the legacy import path.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
+from repro.core.streaming import ebg_partition, ebg_partition_chunked
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.api.config import EBGConfig, check_compute_backend
-from repro.api.registry import register_partitioner
-from repro.core.order import degree_sum_order
-from repro.core.types import Graph, PartitionResult
-from repro.kernels import ops
-
-
-@functools.partial(jax.jit, static_argnames=("num_parts", "num_vertices"))
-def _ebg_scan(src, dst, *, num_parts: int, num_vertices: int, alpha: float, beta: float):
-    E = src.shape[0]
-    p = num_parts
-    inv_e = p / jnp.float32(E)  # 1/(|E|/p)
-    inv_v = p / jnp.float32(num_vertices)
-
-    keep0 = jnp.zeros((p, num_vertices), dtype=jnp.bool_)
-    e0 = jnp.zeros((p,), dtype=jnp.float32)
-    v0 = jnp.zeros((p,), dtype=jnp.float32)
-
-    def step(state, uv):
-        keep, e_count, v_count = state
-        u, v = uv
-        miss_u = ~keep[:, u]
-        miss_v = ~keep[:, v]
-        score = (
-            miss_u.astype(jnp.float32)
-            + miss_v.astype(jnp.float32)
-            + alpha * e_count * inv_e
-            + beta * v_count * inv_v
-        )
-        i = jnp.argmin(score).astype(jnp.int32)
-        e_count = e_count.at[i].add(1.0)
-        v_count = v_count.at[i].add(miss_u[i].astype(jnp.float32) + miss_v[i].astype(jnp.float32))
-        keep = keep.at[i, u].set(True).at[i, v].set(True)
-        return (keep, e_count, v_count), i
-
-    (keep, e_count, v_count), part = jax.lax.scan(step, (keep0, e0, v0), (src, dst))
-    return part, keep, e_count, v_count
-
-
-@register_partitioner(
-    "ebg",
-    config=EBGConfig,
-    deterministic=True,
-    jit_compatible=True,
-    description="Faithful EBG scan (paper Algorithm 1 + degree-sum order)",
-)
-def ebg_partition(
-    graph: Graph,
-    num_parts: int,
-    *,
-    alpha: float = 1.0,
-    beta: float = 1.0,
-    order: Optional[np.ndarray] = None,
-    sort_edges: bool = True,
-) -> PartitionResult:
-    """Faithful EBG (Algorithm 1 + §IV-C degree-sum ordering)."""
-    if order is None and sort_edges:
-        order = degree_sum_order(graph)
-    src = jnp.asarray(np.asarray(graph.src), dtype=jnp.int32)
-    dst = jnp.asarray(np.asarray(graph.dst), dtype=jnp.int32)
-    if order is not None:
-        o = jnp.asarray(order)
-        src, dst = src[o], dst[o]
-    part, _, _, _ = _ebg_scan(
-        src,
-        dst,
-        num_parts=num_parts,
-        num_vertices=graph.num_vertices,
-        alpha=float(alpha),
-        beta=float(beta),
-    )
-    return PartitionResult(part=part, num_parts=num_parts, order=None if order is None else np.asarray(order))
-
-
-@functools.partial(
-    jax.jit, static_argnames=("num_parts", "num_vertices", "block", "backend")
-)
-def _ebg_chunked(
-    src, dst, valid, num_real_edges, *, num_parts: int, num_vertices: int,
-    alpha: float, beta: float, block: int, backend: str = "xla",
-):
-    E = src.shape[0]
-    p = num_parts
-    assert E % block == 0
-    # Balance terms are normalized by the REAL edge count — pad edges must
-    # not dilute the alpha term. Traced (not static) so graphs sharing a
-    # padded shape share one compiled executable.
-    inv_e = p / num_real_edges.astype(jnp.float32)
-    inv_v = p / jnp.float32(num_vertices)
-
-    e0 = jnp.zeros((p,), dtype=jnp.float32)
-    v0 = jnp.zeros((p,), dtype=jnp.float32)
-
-    if backend == "xla":
-        # Dense (p, V) bool membership table, batched gathers for the score
-        # phase. Kept as the A/B baseline for the bitset path below.
-        keep0 = jnp.zeros((p, num_vertices), dtype=jnp.bool_)
-
-        def step(state, uv_block):
-            keep, e_count, v_count = state
-            ub, vb, valb = uv_block  # [B]
-            # Vectorized membership lookups against block-start keep: (p, B).
-            miss_u = ~keep[:, ub]
-            miss_v = ~keep[:, vb]
-            memb = miss_u.astype(jnp.float32) + miss_v.astype(jnp.float32)
-
-            # Sequential exact commit of balance terms within the block. Pad
-            # edges are scored (uniform work per lane) but never committed:
-            # they leave e_count/v_count untouched and route to row `p`.
-            def body(j, carry):
-                e_c, v_c, parts = carry
-                score = memb[:, j] + alpha * e_c * inv_e + beta * v_c * inv_v
-                i = jnp.argmin(score).astype(jnp.int32)
-                live = valb[j].astype(jnp.float32)
-                e_c = e_c.at[i].add(live)
-                v_c = v_c.at[i].add(live * memb[i, j])
-                return e_c, v_c, parts.at[j].set(jnp.where(valb[j], i, p))
-
-            e_count, v_count, parts = jax.lax.fori_loop(
-                0, ub.shape[0], body, (e_count, v_count, jnp.zeros((ub.shape[0],), jnp.int32))
-            )
-            # Batched keep update after the block commits; pad edges carry the
-            # out-of-bounds row `p` and are dropped by the scatter.
-            keep = keep.at[parts, ub].set(True, mode="drop")
-            keep = keep.at[parts, vb].set(True, mode="drop")
-            return (keep, e_count, v_count), parts
-
-        keep0_state = keep0
-    else:
-        # Packed uint32 bitset membership (32x smaller than the dense bool
-        # table: p=32, V=1M -> 4 MB, VMEM-resident for the Pallas kernel).
-        # The whole block — membership score, argmin, exact balance commit,
-        # bitset update — runs inside one fused ops.ebg_commit_block call
-        # (ref oracle or Pallas kernel); assignments stay identical to the
-        # dense path because membership is pinned to block-start state and
-        # the commit arithmetic is term-for-term the same.
-        vw = (num_vertices + 31) // 32
-        keep0_state = jnp.zeros((p, vw), dtype=jnp.uint32)
-
-        def step(state, uv_block):
-            keep_bits, e_count, v_count = state
-            ub, vb, valb = uv_block  # [B]
-            keep_bits, e_count, v_count, parts = ops.ebg_commit_block(
-                keep_bits, e_count, v_count, ub, vb, valb,
-                alpha=alpha, beta=beta, inv_e=inv_e, inv_v=inv_v, impl=backend,
-            )
-            return (keep_bits, e_count, v_count), parts
-
-    (keep, e_count, v_count), part = jax.lax.scan(
-        step,
-        (keep0_state, e0, v0),
-        (src.reshape(-1, block), dst.reshape(-1, block), valid.reshape(-1, block)),
-    )
-    return part.reshape(-1), keep, e_count, v_count
-
-
-@register_partitioner(
-    "ebg_chunked",
-    config=EBGConfig,
-    deterministic=True,
-    chunked=True,
-    jit_compatible=True,
-    benchmark_default=False,
-    compute_backends=("xla", "ref", "pallas"),
-    description="Blocked EBG throughput variant (block=1 ≡ faithful)",
-)
-def ebg_partition_chunked(
-    graph: Graph,
-    num_parts: int,
-    *,
-    alpha: float = 1.0,
-    beta: float = 1.0,
-    block: int = 256,
-    sort_edges: bool = True,
-    compute_backend: str = "xla",
-) -> PartitionResult:
-    """Blocked EBG (beyond-paper throughput variant; block=1 ≡ faithful).
-
-    compute_backend "xla" scores against the dense bool membership table;
-    "ref"/"pallas" score against the packed uint32 bitset via
-    repro.kernels.ops.ebg_membership — assignments are identical.
-    """
-    check_compute_backend(compute_backend)
-    order = degree_sum_order(graph) if sort_edges else None
-    src = np.asarray(graph.src, dtype=np.int32)
-    dst = np.asarray(graph.dst, dtype=np.int32)
-    if order is not None:
-        src, dst = src[order], dst[order]
-    E = src.shape[0]
-    pad = (-E) % block
-    valid = np.ones((E + pad,), bool)
-    if pad:
-        # Pad with self-loops on vertex 0, masked out of the commit loop
-        # (and dropped from the result).
-        src = np.concatenate([src, np.zeros((pad,), np.int32)])
-        dst = np.concatenate([dst, np.zeros((pad,), np.int32)])
-        valid[E:] = False
-    part, _, _, _ = _ebg_chunked(
-        jnp.asarray(src),
-        jnp.asarray(dst),
-        jnp.asarray(valid),
-        jnp.float32(E),
-        num_parts=num_parts,
-        num_vertices=graph.num_vertices,
-        alpha=float(alpha),
-        beta=float(beta),
-        block=block,
-        backend=compute_backend,
-    )
-    part = part[:E]
-    return PartitionResult(part=part, num_parts=num_parts, order=order)
+__all__ = ["ebg_partition", "ebg_partition_chunked"]

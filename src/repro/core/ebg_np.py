@@ -1,54 +1,11 @@
-"""Pure-numpy EBG oracle (test reference for the JAX implementation)."""
+"""Pure-numpy EBG oracle — legacy import path.
+
+The reference loop now lives in `repro.core.streaming_np`, parameterized
+by the same `EdgeScorer` definitions the JAX drivers consume; EBG is its
+stock "ebv" instance (ce=alpha, cv=beta).
+"""
 from __future__ import annotations
 
-from typing import Optional
+from repro.core.streaming_np import ebg_partition_np
 
-import numpy as np
-
-from repro.core.order import degree_sum_order
-from repro.core.types import Graph, PartitionResult
-
-
-def ebg_partition_np(
-    graph: Graph,
-    num_parts: int,
-    *,
-    alpha: float = 1.0,
-    beta: float = 1.0,
-    order: Optional[np.ndarray] = None,
-    sort_edges: bool = True,
-) -> PartitionResult:
-    if order is None and sort_edges:
-        order = degree_sum_order(graph)
-    src = np.asarray(graph.src, dtype=np.int64)
-    dst = np.asarray(graph.dst, dtype=np.int64)
-    if order is not None:
-        src, dst = src[order], dst[order]
-    E, V, p = src.shape[0], graph.num_vertices, num_parts
-    keep = np.zeros((p, V), dtype=bool)
-    # float32 state in the same op order as the JAX scan, so both
-    # implementations resolve near-ties identically.
-    e_count = np.zeros((p,), dtype=np.float32)
-    v_count = np.zeros((p,), dtype=np.float32)
-    part = np.empty((E,), dtype=np.int32)
-    inv_e = np.float32(p) / np.float32(E)
-    inv_v = np.float32(p) / np.float32(V)
-    alpha = np.float32(alpha)
-    beta = np.float32(beta)
-    for m in range(E):
-        u, v = src[m], dst[m]
-        miss_u = ~keep[:, u]
-        miss_v = ~keep[:, v]
-        score = (
-            miss_u.astype(np.float32)
-            + miss_v.astype(np.float32)
-            + alpha * e_count * inv_e
-            + beta * v_count * inv_v
-        )
-        i = int(np.argmin(score))
-        part[m] = i
-        e_count[i] += 1
-        v_count[i] += float(miss_u[i]) + float(miss_v[i])
-        keep[i, u] = True
-        keep[i, v] = True
-    return PartitionResult(part=part, num_parts=p, order=None if order is None else np.asarray(order))
+__all__ = ["ebg_partition_np"]

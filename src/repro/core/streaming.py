@@ -1,0 +1,550 @@
+"""Streaming vertex-cut partitioner core: a pluggable `EdgeScorer` over
+ONE `lax.scan` driver and ONE chunked block-commit driver.
+
+The paper's EBV algorithm (our `ebg`) is one member of a family of
+streaming greedy edge partitioners — HDRF [Petroni et al., CIKM'15] and
+PowerGraph Greedy [Gonzalez et al., OSDI'12] are the baselines its
+headline table compares against — that share one sequential state machine
+and differ ONLY in the per-edge score they minimize. The shared machine:
+
+    state: keep[i] ⊆ V  (endpoint membership per subgraph, a p×V bitset)
+           e_count[i], v_count[i]  (running balance counters)
+    per edge (u, v):
+        i* = argmin_i score(u, v, i, state)   (ties -> lowest subgraph id)
+        e_count[i*] += 1; v_count[i*] += #endpoints new to keep[i*]
+        keep[i*] |= {u, v}
+
+`EdgeScorer` is the frozen description of the score:
+
+    score(u,v,i) = wu·1[u∉keep[i]] + wv·1[v∉keep[i]]          (replication)
+                 + ce · e_count[i] · norm_e                   (edge balance)
+                 + cv · v_count[i] · (p/|V|)                  (vertex balance)
+
+where (wu, wv) are per-edge degree weights (1 unless the scorer has a
+degree term), and norm_e is either the static p/|E| (EBV) or the dynamic
+HDRF range normalizer 1/(eps + max(e_count) − min(e_count)). Stock
+instances:
+
+| scorer   | wu, wv            | norm_e            | ce, cv        |
+|----------|-------------------|-------------------|---------------|
+| `ebv`    | 1, 1              | p/|E| (static)    | alpha, beta   |
+| `hdrf`   | 2−θ(u), 2−θ(v)    | 1/(eps+max−min)   | lambda, 0     |
+| `greedy` | 1, 1              | 1/(eps+max−min)   | 1, 0          |
+
+θ(u) = d(u)/(d(u)+d(v)) is HDRF's normalized degree; we use exact total
+degrees (the offline variant — the graph is in memory), so the weights
+are a precomputed per-edge stream and the state machine stays identical
+across scorers. HDRF's published argmax of g(u,i)+g(v,i)+bal(i) with
+g(u,i) = (2−θ(u))·1[u∈A(i)] is equivalent, term by constant term, to the
+argmin above; Greedy is HDRF with the degree term dropped.
+
+Both drivers are scorer-generic: the faithful `lax.scan` (one edge per
+step) and the blocked commit loop (scores for B edges evaluated against
+block-start membership, balance committed exactly and sequentially inside
+the block — block=1 is exactly the faithful algorithm). The chunked
+driver's "ref"/"pallas" backends route whole blocks through the fused
+`repro.kernels.ops.ebg_commit_block` kernel, which takes the scorer's
+coefficient vector and weight streams. `repro.core.streaming_np` runs the
+same machine in pure numpy (the test oracle, bit-identical).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.config import EBGConfig, GreedyConfig, HDRFConfig, check_compute_backend
+from repro.api.registry import register_partitioner
+from repro.core.order import degree_sum_order
+from repro.core.types import Graph, PartitionResult
+from repro.kernels import ops
+
+MEMBERSHIP_TERMS = ("miss",)  # penalize endpoints absent from keep[i]
+DEGREE_TERMS = ("none", "hdrf_theta")  # per-edge miss weights: 1 | 2−θ
+BALANCE_MODES = ("static", "range")  # norm_e: p/|E| | 1/(eps+max−min)
+TIE_POLICIES = ("lowest",)  # argmin ties -> lowest subgraph id
+UPDATE_RULES = ("standard",)  # commit counters + endpoint membership
+
+
+def _check(value, valid, field: str) -> None:
+    if value not in valid:
+        raise ValueError(f"EdgeScorer.{field} must be one of {valid}, got {value!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeScorer:
+    """Frozen description of a streaming greedy edge-partitioner score.
+
+    Default coefficients (`ce`/`cv`/`eps`) are overridable per call —
+    e.g. `ebg`'s alpha/beta knobs are the EBV scorer's ce/cv.
+    """
+
+    name: str
+    membership: str = "miss"  # replication term (see MEMBERSHIP_TERMS)
+    degree_term: str = "none"  # per-edge miss weighting (DEGREE_TERMS)
+    balance: str = "static"  # edge-balance normalizer (BALANCE_MODES)
+    ce: float = 1.0  # edge-balance coefficient (EBV alpha, HDRF lambda)
+    cv: float = 0.0  # vertex-balance coefficient (EBV beta)
+    eps: float = 1.0  # range-normalizer epsilon
+    tie: str = "lowest"  # argmin tie policy (TIE_POLICIES)
+    update: str = "standard"  # state-update rule (UPDATE_RULES)
+    sort_edges: bool = True  # default §IV-C degree-sum edge ordering
+    description: str = ""
+
+    def __post_init__(self) -> None:
+        _check(self.membership, MEMBERSHIP_TERMS, "membership")
+        _check(self.degree_term, DEGREE_TERMS, "degree_term")
+        _check(self.balance, BALANCE_MODES, "balance")
+        _check(self.tie, TIE_POLICIES, "tie")
+        _check(self.update, UPDATE_RULES, "update")
+        for field in ("ce", "cv", "eps"):
+            v = getattr(self, field)
+            if not isinstance(v, (int, float)) or not np.isfinite(v) or v < 0:
+                raise ValueError(f"EdgeScorer.{field} must be finite and >= 0, got {v!r}")
+
+    @property
+    def weighted(self) -> bool:
+        """Whether the replication term carries per-edge degree weights."""
+        return self.degree_term != "none"
+
+    def coefficients(self, ce=None, cv=None, eps=None) -> tuple[float, float, float]:
+        """Resolve per-call coefficient overrides against the defaults."""
+        return (
+            float(self.ce if ce is None else ce),
+            float(self.cv if cv is None else cv),
+            float(self.eps if eps is None else eps),
+        )
+
+
+_SCORERS: dict[str, EdgeScorer] = {}
+
+
+def register_scorer(scorer: EdgeScorer) -> EdgeScorer:
+    """Register a scorer instance; returns it unchanged (decorator-style)."""
+    if scorer.name in _SCORERS:
+        raise ValueError(f"scorer {scorer.name!r} already registered")
+    _SCORERS[scorer.name] = scorer
+    return scorer
+
+
+def get_scorer(scorer: Union[str, EdgeScorer]) -> EdgeScorer:
+    if isinstance(scorer, EdgeScorer):
+        return scorer
+    try:
+        return _SCORERS[scorer]
+    except KeyError:
+        raise KeyError(f"unknown scorer {scorer!r}; registered: {sorted(_SCORERS)}") from None
+
+
+def scorer_names() -> tuple[str, ...]:
+    return tuple(_SCORERS)
+
+
+def list_scorers() -> tuple[EdgeScorer, ...]:
+    return tuple(_SCORERS.values())
+
+
+EBV = register_scorer(EdgeScorer(
+    name="ebv",
+    ce=1.0,
+    cv=1.0,
+    description="Paper Algorithm 1: unit membership + static p/|E|, p/|V| balance",
+))
+HDRF = register_scorer(EdgeScorer(
+    name="hdrf",
+    degree_term="hdrf_theta",
+    balance="range",
+    ce=1.0,
+    cv=0.0,
+    sort_edges=False,
+    description="HDRF [Petroni'15]: 2−θ degree-weighted membership + lambda range balance",
+))
+GREEDY = register_scorer(EdgeScorer(
+    name="greedy",
+    balance="range",
+    ce=1.0,
+    cv=0.0,
+    sort_edges=False,
+    description="PowerGraph Greedy [Gonzalez'12]: A(u)∩A(v) membership + range balance",
+))
+
+
+def edge_weights_np(
+    scorer: EdgeScorer, graph: Graph, src: np.ndarray, dst: np.ndarray
+) -> Optional[tuple[np.ndarray, np.ndarray]]:
+    """Per-edge replication-term weights (wu, wv) as f32 numpy, or None.
+
+    Computed host-side from exact total degrees, so the JAX drivers and the
+    numpy oracle consume the SAME arrays — degree weighting can never be a
+    parity hazard. `src`/`dst` are the (possibly reordered) edge streams.
+    """
+    if not scorer.weighted:
+        return None
+    deg = graph.degrees().astype(np.float32)
+    du, dv = deg[src], deg[dst]
+    tot = du + dv
+    wu = np.float32(2.0) - du / tot
+    wv = np.float32(2.0) - dv / tot
+    return wu, wv
+
+
+# ------------------------------------------------------------- scan driver
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_parts", "num_vertices", "weighted", "balance")
+)
+def _streaming_scan(
+    src, dst, wu, wv, *, num_parts: int, num_vertices: int,
+    weighted: bool, balance: str, ce: float, cv: float, eps: float,
+):
+    E = src.shape[0]
+    p = num_parts
+    inv_e = p / jnp.float32(E)  # 1/(|E|/p)
+    inv_v = p / jnp.float32(num_vertices)
+
+    keep0 = jnp.zeros((p, num_vertices), dtype=jnp.bool_)
+    e0 = jnp.zeros((p,), dtype=jnp.float32)
+    v0 = jnp.zeros((p,), dtype=jnp.float32)
+
+    def step(state, x):
+        keep, e_count, v_count = state
+        if weighted:
+            u, v, w_u, w_v = x
+        else:
+            u, v = x
+        mu = (~keep[:, u]).astype(jnp.float32)
+        mv = (~keep[:, v]).astype(jnp.float32)
+        base = w_u * mu + w_v * mv if weighted else mu + mv
+        if balance == "static":
+            norm = inv_e
+        else:
+            norm = 1.0 / (eps + (jnp.max(e_count) - jnp.min(e_count)))
+        score = base + ce * e_count * norm + cv * v_count * inv_v
+        i = jnp.argmin(score).astype(jnp.int32)
+        e_count = e_count.at[i].add(1.0)
+        v_count = v_count.at[i].add(mu[i] + mv[i])
+        keep = keep.at[i, u].set(True).at[i, v].set(True)
+        return (keep, e_count, v_count), i
+
+    xs = (src, dst, wu, wv) if weighted else (src, dst)
+    (keep, e_count, v_count), part = jax.lax.scan(step, (keep0, e0, v0), xs)
+    return part, keep, e_count, v_count
+
+
+def streaming_scan_partition(
+    graph: Graph,
+    num_parts: int,
+    scorer: Union[str, EdgeScorer],
+    *,
+    ce: Optional[float] = None,
+    cv: Optional[float] = None,
+    eps: Optional[float] = None,
+    order: Optional[np.ndarray] = None,
+    sort_edges: Optional[bool] = None,
+) -> PartitionResult:
+    """Faithful sequential stream (one `lax.scan` step per edge) for any
+    registered scorer. `ebg` ≡ scorer="ebv" with ce=alpha, cv=beta."""
+    sc = get_scorer(scorer)
+    ce, cv, eps = sc.coefficients(ce, cv, eps)
+    if sort_edges is None:
+        sort_edges = sc.sort_edges
+    if order is None and sort_edges:
+        order = degree_sum_order(graph)
+    src = np.asarray(graph.src, dtype=np.int32)
+    dst = np.asarray(graph.dst, dtype=np.int32)
+    if order is not None:
+        src, dst = src[order], dst[order]
+    w = edge_weights_np(sc, graph, src, dst)
+    zero = jnp.zeros((0,), jnp.float32)
+    part, _, _, _ = _streaming_scan(
+        jnp.asarray(src),
+        jnp.asarray(dst),
+        zero if w is None else jnp.asarray(w[0]),
+        zero if w is None else jnp.asarray(w[1]),
+        num_parts=num_parts,
+        num_vertices=graph.num_vertices,
+        weighted=sc.weighted,
+        balance=sc.balance,
+        ce=ce,
+        cv=cv,
+        eps=eps,
+    )
+    return PartitionResult(
+        part=part, num_parts=num_parts, order=None if order is None else np.asarray(order)
+    )
+
+
+# ---------------------------------------------------------- chunked driver
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_parts", "num_vertices", "block", "backend", "weighted", "balance"),
+)
+def _streaming_chunked(
+    src, dst, valid, wu, wv, num_real_edges, *, num_parts: int, num_vertices: int,
+    block: int, backend: str, weighted: bool, balance: str,
+    ce: float, cv: float, eps: float,
+):
+    E = src.shape[0]
+    p = num_parts
+    assert E % block == 0
+    # Balance terms are normalized by the REAL edge count — pad edges must
+    # not dilute the ce term. Traced (not static) so graphs sharing a
+    # padded shape share one compiled executable.
+    inv_e = p / num_real_edges.astype(jnp.float32)
+    inv_v = p / jnp.float32(num_vertices)
+
+    e0 = jnp.zeros((p,), dtype=jnp.float32)
+    v0 = jnp.zeros((p,), dtype=jnp.float32)
+
+    if backend == "xla":
+        # Dense (p, V) bool membership table, batched gathers for the score
+        # phase. Kept as the A/B baseline for the bitset path below.
+        keep0_state = jnp.zeros((p, num_vertices), dtype=jnp.bool_)
+
+        def step(state, uv_block):
+            keep, e_count, v_count = state
+            if weighted:
+                ub, vb, valb, wub, wvb = uv_block  # [B]
+            else:
+                ub, vb, valb = uv_block
+            # Vectorized membership lookups against block-start keep: (p, B).
+            mu = (~keep[:, ub]).astype(jnp.float32)
+            mv = (~keep[:, vb]).astype(jnp.float32)
+            memb = mu + mv
+            wmemb = wub[None, :] * mu + wvb[None, :] * mv if weighted else memb
+
+            # Sequential exact commit of balance terms within the block. Pad
+            # edges are scored (uniform work per lane) but never committed:
+            # they leave e_count/v_count untouched and route to row `p`.
+            def body(j, carry):
+                e_c, v_c, parts = carry
+                if balance == "static":
+                    norm = inv_e
+                else:
+                    norm = 1.0 / (eps + (jnp.max(e_c) - jnp.min(e_c)))
+                score = wmemb[:, j] + ce * e_c * norm + cv * v_c * inv_v
+                i = jnp.argmin(score).astype(jnp.int32)
+                live = valb[j].astype(jnp.float32)
+                e_c = e_c.at[i].add(live)
+                v_c = v_c.at[i].add(live * memb[i, j])
+                return e_c, v_c, parts.at[j].set(jnp.where(valb[j], i, p))
+
+            e_count, v_count, parts = jax.lax.fori_loop(
+                0, ub.shape[0], body, (e_count, v_count, jnp.zeros((ub.shape[0],), jnp.int32))
+            )
+            # Batched keep update after the block commits; pad edges carry the
+            # out-of-bounds row `p` and are dropped by the scatter.
+            keep = keep.at[parts, ub].set(True, mode="drop")
+            keep = keep.at[parts, vb].set(True, mode="drop")
+            return (keep, e_count, v_count), parts
+
+    else:
+        # Packed uint32 bitset membership (32x smaller than the dense bool
+        # table: p=32, V=1M -> 4 MB, VMEM-resident for the Pallas kernel).
+        # The whole block — membership score, argmin, exact balance commit,
+        # bitset update — runs inside one fused ops.ebg_commit_block call
+        # (ref oracle or Pallas kernel), parameterized by the scorer's
+        # coefficient vector and weight streams; assignments stay identical
+        # to the dense path because membership is pinned to block-start
+        # state and the commit arithmetic is term-for-term the same.
+        vw = (num_vertices + 31) // 32
+        keep0_state = jnp.zeros((p, vw), dtype=jnp.uint32)
+
+        def step(state, uv_block):
+            keep_bits, e_count, v_count = state
+            if weighted:
+                ub, vb, valb, wub, wvb = uv_block  # [B]
+            else:
+                ub, vb, valb = uv_block
+                wub = wvb = None
+            keep_bits, e_count, v_count, parts = ops.ebg_commit_block(
+                keep_bits, e_count, v_count, ub, vb, valb,
+                alpha=ce, beta=cv, inv_e=inv_e, inv_v=inv_v,
+                eps=eps, balance=balance, wu=wub, wv=wvb, impl=backend,
+            )
+            return (keep_bits, e_count, v_count), parts
+
+    blocks = [src.reshape(-1, block), dst.reshape(-1, block), valid.reshape(-1, block)]
+    if weighted:
+        blocks += [wu.reshape(-1, block), wv.reshape(-1, block)]
+    (keep, e_count, v_count), part = jax.lax.scan(step, (keep0_state, e0, v0), tuple(blocks))
+    return part.reshape(-1), keep, e_count, v_count
+
+
+def streaming_chunked_partition(
+    graph: Graph,
+    num_parts: int,
+    scorer: Union[str, EdgeScorer],
+    *,
+    ce: Optional[float] = None,
+    cv: Optional[float] = None,
+    eps: Optional[float] = None,
+    block: int = 256,
+    sort_edges: Optional[bool] = None,
+    compute_backend: str = "xla",
+) -> PartitionResult:
+    """Blocked throughput variant of the stream (block=1 ≡ faithful) for
+    any registered scorer.
+
+    compute_backend "xla" scores against the dense bool membership table;
+    "ref"/"pallas" run each block through the fused packed-bitset
+    `repro.kernels.ops.ebg_commit_block` — assignments are identical.
+    """
+    check_compute_backend(compute_backend)
+    sc = get_scorer(scorer)
+    ce, cv, eps = sc.coefficients(ce, cv, eps)
+    if sort_edges is None:
+        sort_edges = sc.sort_edges
+    order = degree_sum_order(graph) if sort_edges else None
+    src = np.asarray(graph.src, dtype=np.int32)
+    dst = np.asarray(graph.dst, dtype=np.int32)
+    if order is not None:
+        src, dst = src[order], dst[order]
+    w = edge_weights_np(sc, graph, src, dst)
+    E = src.shape[0]
+    pad = (-E) % block
+    valid = np.ones((E + pad,), bool)
+    if pad:
+        # Pad with self-loops on vertex 0, masked out of the commit loop
+        # (and dropped from the result). Pad weights are never committed;
+        # 1.0 keeps the scored lanes finite.
+        src = np.concatenate([src, np.zeros((pad,), np.int32)])
+        dst = np.concatenate([dst, np.zeros((pad,), np.int32)])
+        valid[E:] = False
+        if w is not None:
+            one = np.ones((pad,), np.float32)
+            w = (np.concatenate([w[0], one]), np.concatenate([w[1], one]))
+    zero = jnp.zeros((0,), jnp.float32)
+    part, _, _, _ = _streaming_chunked(
+        jnp.asarray(src),
+        jnp.asarray(dst),
+        jnp.asarray(valid),
+        zero if w is None else jnp.asarray(w[0]),
+        zero if w is None else jnp.asarray(w[1]),
+        jnp.float32(E),
+        num_parts=num_parts,
+        num_vertices=graph.num_vertices,
+        block=block,
+        backend=compute_backend,
+        weighted=sc.weighted,
+        balance=sc.balance,
+        ce=ce,
+        cv=cv,
+        eps=eps,
+    )
+    part = part[:E]
+    return PartitionResult(part=part, num_parts=num_parts, order=order)
+
+
+# ----------------------------------------------- stock scorer partitioners
+
+
+@register_partitioner(
+    "ebg",
+    config=EBGConfig,
+    deterministic=True,
+    jit_compatible=True,
+    scorer="ebv",
+    description="Faithful EBG scan (paper Algorithm 1 + degree-sum order)",
+)
+def ebg_partition(
+    graph: Graph,
+    num_parts: int,
+    *,
+    alpha: float = 1.0,
+    beta: float = 1.0,
+    order: Optional[np.ndarray] = None,
+    sort_edges: bool = True,
+) -> PartitionResult:
+    """Faithful EBG (Algorithm 1 + §IV-C degree-sum ordering)."""
+    return streaming_scan_partition(
+        graph, num_parts, EBV, ce=alpha, cv=beta, order=order, sort_edges=sort_edges
+    )
+
+
+@register_partitioner(
+    "ebg_chunked",
+    config=EBGConfig,
+    deterministic=True,
+    chunked=True,
+    jit_compatible=True,
+    benchmark_default=False,
+    compute_backends=("xla", "ref", "pallas"),
+    scorer="ebv",
+    description="Blocked EBG throughput variant (block=1 ≡ faithful)",
+)
+def ebg_partition_chunked(
+    graph: Graph,
+    num_parts: int,
+    *,
+    alpha: float = 1.0,
+    beta: float = 1.0,
+    block: int = 256,
+    sort_edges: bool = True,
+    compute_backend: str = "xla",
+) -> PartitionResult:
+    """Blocked EBG (beyond-paper throughput variant; block=1 ≡ faithful)."""
+    return streaming_chunked_partition(
+        graph, num_parts, EBV, ce=alpha, cv=beta, block=block,
+        sort_edges=sort_edges, compute_backend=compute_backend,
+    )
+
+
+@register_partitioner(
+    "hdrf",
+    config=HDRFConfig,
+    deterministic=True,
+    chunked=True,
+    jit_compatible=True,
+    compute_backends=("xla", "ref", "pallas"),
+    scorer="hdrf",
+    description="HDRF [Petroni'15] on the streaming scorer core (block=1 ≡ faithful)",
+)
+def hdrf_partition(
+    graph: Graph,
+    num_parts: int,
+    *,
+    lam: float = 1.0,
+    eps: float = 1.0,
+    block: int = 256,
+    sort_edges: bool = False,
+    compute_backend: str = "xla",
+) -> PartitionResult:
+    """HDRF: highest-degree-replicated-first (paper baseline)."""
+    return streaming_chunked_partition(
+        graph, num_parts, HDRF, ce=lam, eps=eps, block=block,
+        sort_edges=sort_edges, compute_backend=compute_backend,
+    )
+
+
+@register_partitioner(
+    "greedy",
+    config=GreedyConfig,
+    deterministic=True,
+    chunked=True,
+    jit_compatible=True,
+    compute_backends=("xla", "ref", "pallas"),
+    scorer="greedy",
+    description="PowerGraph Greedy [Gonzalez'12] on the streaming scorer core",
+)
+def greedy_partition(
+    graph: Graph,
+    num_parts: int,
+    *,
+    eps: float = 1.0,
+    block: int = 256,
+    sort_edges: bool = False,
+    compute_backend: str = "xla",
+) -> PartitionResult:
+    """PowerGraph Greedy: A(u)∩A(v) heuristic (paper baseline)."""
+    return streaming_chunked_partition(
+        graph, num_parts, GREEDY, eps=eps, block=block,
+        sort_edges=sort_edges, compute_backend=compute_backend,
+    )

@@ -1,4 +1,5 @@
-"""Pallas TPU kernel: fused EBG block commit (score + argmin + commit).
+"""Pallas TPU kernel: fused streaming-scorer block commit (score + argmin
++ commit) for the chunked vertex-cut partitioners.
 
 `ebg_membership_pallas` only covers the vectorizable score phase; the
 chunked partitioner still paid one p-wide argmin plus four scattered
@@ -6,7 +7,8 @@ chunked partitioner still paid one p-wide argmin plus four scattered
 per-block pipeline:
 
   1. membership of the block's 2·B endpoints against the block-start
-     packed bitset (vectorized, VPU-friendly),
+     packed bitset (vectorized, VPU-friendly), optionally weighted by the
+     scorer's per-edge degree term (HDRF's 2−θ streams),
   2. the sequential per-edge argmin + exact balance-term commit,
   3. the per-winner bitset updates,
 
@@ -17,9 +19,14 @@ to the unfused path (`repro.kernels.ref.ebg_commit_block_ref`): membership
 is pinned to the block-start bitset, so the in-loop bit commits never feed
 back into this block's scores.
 
-alpha/beta/inv_e/inv_v ride in as a (4,) f32 coefficient vector — they are
-traced values in `_ebg_chunked` (inv_e depends on the real edge count), so
-they cannot be static kernel parameters.
+The scorer's coefficients ride in as a (5,) f32 vector — ce (edge-balance
+coefficient: EBV alpha / HDRF lambda), cv (vertex-balance: EBV beta),
+inv_e, inv_v (the static normalizers), eps (the range normalizer's
+epsilon) — they are traced values in the chunked driver (inv_e depends on
+the real edge count), so they cannot be static kernel parameters. The
+scorer's STRUCTURE (balance mode, degree weighting) is static: it selects
+the traced computation, keeping the stock-EBV path identical to the
+pre-generalization kernel.
 """
 from __future__ import annotations
 
@@ -33,13 +40,14 @@ from repro.kernels.dispatch import default_interpret
 
 
 def _ebg_commit_kernel(
-    u_ref, v_ref, valid_ref, coef_ref, keep_in_ref, e_in_ref, v_in_ref,
-    keep_ref, e_ref, vc_ref, parts_ref, *, num_parts: int
+    u_ref, v_ref, valid_ref, wu_ref, wv_ref, coef_ref, keep_in_ref, e_in_ref, v_in_ref,
+    keep_ref, e_ref, vc_ref, parts_ref, *, num_parts: int, balance: str, weighted: bool
 ):
     u = u_ref[...]
     v = v_ref[...]
     valid = valid_ref[...]
-    alpha, beta, inv_e, inv_v = coef_ref[0], coef_ref[1], coef_ref[2], coef_ref[3]
+    ce, cv = coef_ref[0], coef_ref[1]
+    inv_e, inv_v, eps = coef_ref[2], coef_ref[3], coef_ref[4]
     keep = keep_in_ref[...]  # [p, Vw] block-start bitset, pinned for scoring
 
     def miss(ids):
@@ -47,12 +55,22 @@ def _ebg_commit_kernel(
         bits = (words >> (ids & 31).astype(jnp.uint32)) & jnp.uint32(1)
         return (jnp.uint32(1) - bits).astype(jnp.float32)
 
-    memb = miss(u) + miss(v)  # [p, B]
+    mu = miss(u)
+    mv = miss(v)
+    memb = mu + mv  # [p, B]
+    if weighted:
+        wmemb = wu_ref[...][None, :] * mu + wv_ref[...][None, :] * mv
+    else:
+        wmemb = memb
     keep_ref[...] = keep  # commit loop mutates the output copy in place
 
     def body(j, carry):
         e_c, v_c = carry
-        score = memb[:, j] + alpha * e_c * inv_e + beta * v_c * inv_v
+        if balance == "static":
+            norm = inv_e
+        else:
+            norm = 1.0 / (eps + (jnp.max(e_c) - jnp.min(e_c)))
+        score = wmemb[:, j] + ce * e_c * norm + cv * v_c * inv_v
         i = jnp.argmin(score).astype(jnp.int32)  # ties -> lowest subgraph id
         live = valid[j].astype(jnp.float32)
         e_c = e_c.at[i].add(live)
@@ -82,7 +100,7 @@ def _ebg_commit_kernel(
     vc_ref[...] = v_c
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("balance", "weighted", "interpret"))
 def ebg_commit_block_pallas(
     keep_bits: jax.Array,  # [p, Vw] uint32
     e_count: jax.Array,  # [p] f32
@@ -90,15 +108,21 @@ def ebg_commit_block_pallas(
     u: jax.Array,  # [B] int32
     v: jax.Array,  # [B] int32
     valid: jax.Array,  # [B] bool (pad edges False)
-    coef: jax.Array,  # [4] f32: alpha, beta, inv_e, inv_v
+    wu: jax.Array,  # [B] f32 membership weights (ignored unless weighted)
+    wv: jax.Array,  # [B] f32
+    coef: jax.Array,  # [5] f32: ce, cv, inv_e, inv_v, eps
     *,
+    balance: str = "static",
+    weighted: bool = False,
     interpret: bool | None = None,
 ):
     interpret = default_interpret(interpret)
     p, vw = keep_bits.shape
     B = u.shape[0]
     keep_out, e_out, v_out, parts = pl.pallas_call(
-        functools.partial(_ebg_commit_kernel, num_parts=p),
+        functools.partial(
+            _ebg_commit_kernel, num_parts=p, balance=balance, weighted=weighted
+        ),
         out_shape=(
             jax.ShapeDtypeStruct((p, vw), jnp.uint32),
             jax.ShapeDtypeStruct((p,), jnp.float32),
@@ -106,5 +130,5 @@ def ebg_commit_block_pallas(
             jax.ShapeDtypeStruct((B,), jnp.int32),
         ),
         interpret=interpret,
-    )(u, v, valid.astype(jnp.int32), coef, keep_bits, e_count, v_count)
+    )(u, v, valid.astype(jnp.int32), wu, wv, coef, keep_bits, e_count, v_count)
     return keep_out, e_out, v_out, parts

@@ -139,30 +139,48 @@ def ebg_membership(
 
 def ebg_commit_block(
     keep_bits, e_count, v_count, u, v, valid, *,
-    alpha, beta, inv_e, inv_v,
+    alpha, beta, inv_e, inv_v, eps=1.0, balance: str = "static",
+    wu=None, wv=None,
     impl: str | None = None, interpret: bool | None = None,
 ):
-    """Fused EBG block commit: membership score + argmin + exact balance
-    commit + bitset update for a whole edge block, with the (p,) counters
-    and the (p, ⌈V/32⌉) bitset VMEM-resident on the Pallas path.
+    """Fused streaming-scorer block commit: membership score + argmin +
+    exact balance commit + bitset update for a whole edge block, with the
+    (p,) counters and the (p, ⌈V/32⌉) bitset VMEM-resident on the Pallas
+    path.
 
-    alpha/beta/inv_e/inv_v may be traced scalars (inv_e depends on the real
-    edge count). Pad edges carry valid=False: they are scored (uniform lane
-    work) but never committed, and their assignment is the out-of-bounds
-    row p. Returns (keep_bits, e_count, v_count, parts) — assignments
-    bit-identical across impls and to the dense-membership XLA path.
+    The scorer rides in as its coefficient vector plus structure flags:
+    alpha/beta are the generic edge/vertex balance coefficients (EBV's
+    namesakes; HDRF's lambda is alpha with beta=0), `balance` selects the
+    edge-balance normalizer ("static" inv_e = p/|E|, "range"
+    1/(eps + max−min)), and wu/wv optionally weight the membership term
+    per edge (HDRF's 2−θ degree streams). All coefficients may be traced
+    scalars (inv_e depends on the real edge count). Pad edges carry
+    valid=False: they are scored (uniform lane work) but never committed,
+    and their assignment is the out-of-bounds row p. Returns (keep_bits,
+    e_count, v_count, parts) — assignments bit-identical across impls and
+    to the dense-membership XLA path.
     """
     impl, interpret = _resolve_impl(impl, interpret)
+    if balance not in ("static", "range"):
+        raise ValueError(f"balance must be 'static' or 'range', got {balance!r}")
+    if (wu is None) != (wv is None):
+        raise ValueError("wu and wv must be given together")
     if impl == "ref":
         return ref.ebg_commit_block_ref(
             keep_bits, e_count, v_count, u, v, valid,
             alpha=alpha, beta=beta, inv_e=inv_e, inv_v=inv_v,
+            eps=eps, balance=balance, wu=wu, wv=wv,
         )
     coef = jnp.stack([
-        jnp.float32(alpha), jnp.float32(beta), jnp.float32(inv_e), jnp.float32(inv_v)
+        jnp.float32(alpha), jnp.float32(beta), jnp.float32(inv_e),
+        jnp.float32(inv_v), jnp.float32(eps),
     ])
+    weighted = wu is not None
+    if not weighted:
+        wu = wv = jnp.zeros(u.shape, jnp.float32)
     return ebg_commit_block_pallas(
-        keep_bits, e_count, v_count, u, v, valid, coef, interpret=interpret
+        keep_bits, e_count, v_count, u, v, valid, wu, wv, coef,
+        balance=balance, weighted=weighted, interpret=interpret,
     )
 
 

@@ -26,22 +26,33 @@ def segment_sum_ref(lsrc, ldst, contrib_scale, mask, val, num_out):
     return jax.ops.segment_sum(data, ldst, num_segments=num_out, indices_are_sorted=True)
 
 
+def _miss_ref(keep_bits, ids):
+    """[B] vertex ids -> [p, B] f32: 1 where the id is absent from keep[i]."""
+    word = keep_bits[:, ids >> 5]
+    bit = (word >> (ids & 31).astype(jnp.uint32)) & 1
+    return (1 - bit).astype(jnp.float32)
+
+
 def ebg_membership_ref(keep_bits, u, v):
     """memb[i, b] = 1[u_b not in keep[i]] + 1[v_b not in keep[i]].
 
     keep_bits: [p, Vw] uint32 packed bitset (bit k of word w = vertex w*32+k).
     """
-
-    def miss(ids):  # [B] -> [p, B]
-        word = keep_bits[:, ids >> 5]
-        bit = (word >> (ids & 31).astype(jnp.uint32)) & 1
-        return (1 - bit).astype(jnp.float32)
-
-    return miss(u) + miss(v)
+    return _miss_ref(keep_bits, u) + _miss_ref(keep_bits, v)
 
 
-def ebg_commit_block_ref(keep_bits, e_count, v_count, u, v, valid, *, alpha, beta, inv_e, inv_v):
-    """Fused EBG block commit: score + argmin + balance commit + bitset update.
+def ebg_commit_block_ref(
+    keep_bits, e_count, v_count, u, v, valid, *,
+    alpha, beta, inv_e, inv_v, eps=1.0, balance="static", wu=None, wv=None,
+):
+    """Fused streaming-scorer block commit: score + argmin + balance commit
+    + bitset update, parameterized by the scorer's coefficient vector.
+
+    alpha/beta are the generic edge/vertex balance coefficients (EBV's
+    namesakes; HDRF's lambda rides in alpha with beta=0). `balance` picks
+    the edge-balance normalizer: "static" uses inv_e (= p/|E|), "range"
+    uses 1/(eps + max(e_count) − min(e_count)). wu/wv, when given, weight
+    the membership term per edge (HDRF's 2−θ degree term).
 
     Membership is evaluated against the BLOCK-START bitset (same staleness
     contract as the chunked scorer); the balance terms are committed exactly
@@ -54,11 +65,18 @@ def ebg_commit_block_ref(keep_bits, e_count, v_count, u, v, valid, *, alpha, bet
     Returns (keep_bits, e_count, v_count, parts).
     """
     p = keep_bits.shape[0]
-    memb = ebg_membership_ref(keep_bits, u, v)  # [p, B] against block-start keep
+    mu = _miss_ref(keep_bits, u)  # [p, B] against block-start keep
+    mv = _miss_ref(keep_bits, v)
+    memb = mu + mv
+    wmemb = wu[None, :] * mu + wv[None, :] * mv if wu is not None else memb
 
     def body(j, carry):
         e_c, v_c, kb, parts = carry
-        score = memb[:, j] + alpha * e_c * inv_e + beta * v_c * inv_v
+        if balance == "static":
+            norm = inv_e
+        else:
+            norm = 1.0 / (eps + (jnp.max(e_c) - jnp.min(e_c)))
+        score = wmemb[:, j] + alpha * e_c * norm + beta * v_c * inv_v
         i = jnp.argmin(score).astype(jnp.int32)
         live = valid[j].astype(jnp.float32)
         e_c = e_c.at[i].add(live)

@@ -33,9 +33,25 @@ def run_graph_dryrun(
     inner_cap: int = 64,
     compute_backend: str = "xla",
     program: str = "cc",
+    partitioner: str = "ebg_chunked",
 ):
     """Lower the distributed stepper for any registered `VertexProgram`
-    (`program="cc" | "sssp" | "pr" | "bfs" | "reach"`) at production scale."""
+    (`program="cc" | "sssp" | "pr" | "bfs" | "reach"`) at production scale.
+
+    `partitioner` names the registered streaming partitioner whose balance
+    behaviour the fixed paddings assume (any EdgeScorer instance: EBV
+    guarantees them via Theorems 1/2; `hdrf`/`greedy` bound edge balance
+    through their range term). The lowering itself is shape-only — the
+    name is validated against the registry and recorded in the result.
+    """
+    from repro.api import get_partitioner
+
+    spec_p = get_partitioner(partitioner)
+    if spec_p.scorer is None:
+        raise ValueError(
+            f"partitioner {partitioner!r} is not a streaming EdgeScorer instance; "
+            "the dry-run paddings assume a balance-bounded streaming partitioner"
+        )
     mesh = make_production_mesh(multi_pod=multi_pod)
     axes = tuple(mesh.axis_names)  # subgraphs over ALL axes: p == #chips
     p = len(mesh.devices.reshape(-1))
@@ -53,6 +69,8 @@ def run_graph_dryrun(
     return dict(
         arch=f"graph_bsp_{low.program}",
         compute_backend=compute_backend,
+        partitioner=spec_p.name,
+        scorer=spec_p.scorer,
         shape=f"p{p}_friendster_scale",
         mesh="2x16x16" if multi_pod else "16x16",
         chips=p,

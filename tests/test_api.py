@@ -28,7 +28,9 @@ ALL_NAMES = partitioner_names()
 
 
 def test_registry_discovers_all_partitioners():
-    assert set(ALL_NAMES) == {"ebg", "ebg_chunked", "dbh", "cvc", "ne", "metis", "hash"}
+    assert set(ALL_NAMES) == {
+        "ebg", "ebg_chunked", "hdrf", "greedy", "dbh", "cvc", "ne", "metis", "hash"
+    }
 
 
 def test_legacy_dict_is_registry_view():
@@ -56,6 +58,8 @@ def test_legacy_dict_is_registry_view():
 def test_benchmark_enumeration_is_capability_driven():
     bench = benchmark_partitioners()
     assert "ebg" in bench and "dbh" in bench
+    # the paper's streaming baselines ride in the default comparison table
+    assert "hdrf" in bench and "greedy" in bench
     # variants/baselines flagged out of the default suite stay registered
     assert "ebg_chunked" not in bench and "hash" not in bench
     assert set(bench) <= set(ALL_NAMES)

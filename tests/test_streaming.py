@@ -1,0 +1,258 @@
+"""Streaming EdgeScorer core: scan ≡ chunked(B=1) ≡ numpy oracle for every
+registered scorer × backend, HDRF/Greedy quality sanity vs hash, custom
+scorer registration, and the paper's Theorem 1/2 imbalance bounds on
+measured EBV partitions (deterministic — the hypothesis bound sweep in
+test_property.py is an optional dep)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    EdgeScorer,
+    ebg_partition,
+    ebg_partition_np,
+    greedy_partition,
+    hdrf_partition,
+    partition_metrics,
+    random_hash_partition,
+    register_scorer,
+    scorer_names,
+    streaming_chunked_partition,
+    streaming_partition_np,
+    streaming_scan_partition,
+    theorem1_edge_bound,
+    theorem2_vertex_bound,
+)
+from repro.core.streaming import _SCORERS, get_scorer
+from repro.graph.generate import rmat
+
+BACKENDS = ("xla", "ref", "pallas")
+SCORERS = ("ebv", "hdrf", "greedy")
+
+
+@pytest.fixture(scope="module")
+def parity_graph():
+    """Small heavy-tailed graph: keeps the pallas-interpret B=1 stream
+    (one kernel call per edge) affordable across the scorer sweep."""
+    return rmat(128, 640, seed=5)
+
+
+# ------------------------------------------------------- scorer registry
+
+
+def test_stock_scorers_registered():
+    assert set(SCORERS) <= set(scorer_names())
+    assert get_scorer("ebv").balance == "static" and get_scorer("ebv").cv == 1.0
+    assert get_scorer("hdrf").degree_term == "hdrf_theta"
+    assert get_scorer("hdrf").balance == "range"
+    assert not get_scorer("greedy").weighted and get_scorer("greedy").cv == 0.0
+
+
+def test_scorer_validation_raises():
+    with pytest.raises(ValueError, match="balance"):
+        EdgeScorer(name="bad", balance="nope")
+    with pytest.raises(ValueError, match="degree_term"):
+        EdgeScorer(name="bad", degree_term="sqrt")
+    with pytest.raises(ValueError, match="tie"):
+        EdgeScorer(name="bad", tie="highest")
+    with pytest.raises(ValueError, match="ce"):
+        EdgeScorer(name="bad", ce=float("nan"))
+    with pytest.raises(ValueError, match="already registered"):
+        register_scorer(EdgeScorer(name="ebv"))
+    with pytest.raises(KeyError, match="unknown scorer"):
+        get_scorer("nope")
+
+
+def test_registry_capability_flags():
+    from repro.api import COMPUTE_BACKENDS, benchmark_partitioners, get_partitioner
+
+    for name, scorer in (("ebg", "ebv"), ("ebg_chunked", "ebv"),
+                         ("hdrf", "hdrf"), ("greedy", "greedy")):
+        assert get_partitioner(name).scorer == scorer
+    assert get_partitioner("dbh").scorer is None
+    for name in ("hdrf", "greedy"):
+        spec = get_partitioner(name)
+        assert spec.chunked and spec.jit_compatible
+        assert spec.compute_backends == COMPUTE_BACKENDS
+        assert name in benchmark_partitioners()
+
+
+# ------------------------------------------------- scan/chunked/oracle parity
+
+
+@pytest.mark.parametrize("scorer", SCORERS)
+def test_scan_matches_numpy_oracle(parity_graph, scorer):
+    for p in (2, 4):
+        a = streaming_scan_partition(parity_graph, p, scorer)
+        b = streaming_partition_np(parity_graph, p, scorer)
+        np.testing.assert_array_equal(np.asarray(a.part), b.part)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("scorer", SCORERS)
+def test_chunked_block1_equals_scan_every_backend(parity_graph, scorer, backend):
+    """The acceptance triangle: chunked(B=1) ≡ scan ≡ oracle, per scorer ×
+    backend (pallas runs under the interpreter off-TPU)."""
+    oracle = streaming_partition_np(parity_graph, 4, scorer)
+    scan = streaming_scan_partition(parity_graph, 4, scorer)
+    chunk = streaming_chunked_partition(
+        parity_graph, 4, scorer, block=1, compute_backend=backend
+    )
+    np.testing.assert_array_equal(np.asarray(scan.part), oracle.part)
+    np.testing.assert_array_equal(np.asarray(chunk.part), oracle.part)
+
+
+@pytest.mark.parametrize("block", [64, 256])
+@pytest.mark.parametrize("scorer", SCORERS)
+def test_chunked_bitset_matches_dense_every_scorer(parity_graph, scorer, block):
+    """ref/pallas packed-bitset blocks assign exactly as the dense xla
+    membership table, for every scorer (same block-staleness contract)."""
+    dense = streaming_chunked_partition(
+        parity_graph, 4, scorer, block=block, compute_backend="xla"
+    )
+    for backend in ("ref", "pallas"):
+        bits = streaming_chunked_partition(
+            parity_graph, 4, scorer, block=block, compute_backend=backend
+        )
+        np.testing.assert_array_equal(np.asarray(dense.part), np.asarray(bits.part))
+
+
+def test_hdrf_greedy_registered_fns_match_oracle(parity_graph):
+    """The registered partitioners (default knobs but block=1) are the
+    faithful streams — exact oracle equality on both entry paths."""
+    h = hdrf_partition(parity_graph, 4, block=1)
+    np.testing.assert_array_equal(
+        np.asarray(h.part), streaming_partition_np(parity_graph, 4, "hdrf").part
+    )
+    g = greedy_partition(parity_graph, 4, block=1)
+    np.testing.assert_array_equal(
+        np.asarray(g.part), streaming_partition_np(parity_graph, 4, "greedy").part
+    )
+
+
+def test_custom_scorer_runs_on_both_drivers(parity_graph):
+    """Registering a new EdgeScorer is all it takes to get the scan driver,
+    the chunked driver on every backend, and the numpy oracle."""
+    custom = EdgeScorer(
+        name="_test_range_vertex",
+        balance="range",
+        ce=0.5,
+        cv=2.0,
+        eps=2.0,
+        sort_edges=True,
+        description="range balance + vertex term (no stock scorer hits this mix)",
+    )
+    register_scorer(custom)
+    try:
+        oracle = streaming_partition_np(parity_graph, 4, "_test_range_vertex")
+        scan = streaming_scan_partition(parity_graph, 4, custom)
+        np.testing.assert_array_equal(np.asarray(scan.part), oracle.part)
+        for backend in ("xla", "ref"):
+            chunk = streaming_chunked_partition(
+                parity_graph, 4, custom, block=1, compute_backend=backend
+            )
+            np.testing.assert_array_equal(np.asarray(chunk.part), oracle.part)
+    finally:
+        _SCORERS.pop("_test_range_vertex")
+
+
+def test_coefficient_overrides_flow_through(parity_graph):
+    """Per-call ce/cv/eps overrides reach the score (hdrf lam here), and
+    the oracle tracks them exactly."""
+    a = hdrf_partition(parity_graph, 4, lam=4.0, block=1)
+    b = streaming_partition_np(parity_graph, 4, "hdrf", ce=4.0)
+    np.testing.assert_array_equal(np.asarray(a.part), b.part)
+    base = hdrf_partition(parity_graph, 4, block=1)
+    assert not np.array_equal(np.asarray(a.part), np.asarray(base.part))
+
+
+# ------------------------------------------------------------ quality sanity
+
+
+def test_hdrf_replication_beats_hash(tiny_powerlaw):
+    """HDRF's raison d'être: fewer replicas than random hashing on
+    power-law graphs (paper Table III pattern)."""
+    p = 8
+    hdrf = partition_metrics(tiny_powerlaw, hdrf_partition(tiny_powerlaw, p))
+    hsh = partition_metrics(tiny_powerlaw, random_hash_partition(tiny_powerlaw, p))
+    assert hdrf.replication_factor <= hsh.replication_factor
+    assert hdrf.edge_imbalance < 1.2
+
+
+def test_greedy_replication_beats_hash(tiny_powerlaw):
+    p = 8
+    grd = partition_metrics(tiny_powerlaw, greedy_partition(tiny_powerlaw, p))
+    hsh = partition_metrics(tiny_powerlaw, random_hash_partition(tiny_powerlaw, p))
+    assert grd.replication_factor <= hsh.replication_factor
+    assert grd.edge_imbalance < 1.2
+
+
+# ------------------------------------------------------- Theorem 1/2 bounds
+
+
+@pytest.mark.parametrize("p", [2, 4, 8])
+def test_theorem_bounds_on_powerlaw(tiny_powerlaw, p):
+    """Theorems 1/2: the worst-case edge/vertex imbalance bounds hold for
+    measured EBV partitions across p (deterministic counterpart of the
+    hypothesis sweep in test_property.py, which needs an optional dep)."""
+    alpha = beta = 1.0
+    m = partition_metrics(tiny_powerlaw, ebg_partition(tiny_powerlaw, p, alpha=alpha, beta=beta))
+    b1 = theorem1_edge_bound(tiny_powerlaw.num_edges, p, alpha, beta)
+    assert m.edge_imbalance <= b1 + 1e-9
+    sum_vi = int(m.vertices_per_part.sum())
+    b2 = theorem2_vertex_bound(sum_vi, tiny_powerlaw.num_vertices, p, alpha, beta)
+    assert m.vertex_imbalance <= b2 + 1e-9
+
+
+@pytest.mark.parametrize("alpha,beta", [(0.5, 2.0), (4.0, 0.25)])
+def test_theorem_bounds_track_alpha_beta(parity_graph, alpha, beta):
+    """The bounds depend on alpha/beta — they must keep holding away from
+    the defaults (numpy oracle: exact same partition, no jit)."""
+    p = 4
+    m = partition_metrics(
+        parity_graph, ebg_partition_np(parity_graph, p, alpha=alpha, beta=beta)
+    )
+    assert m.edge_imbalance <= theorem1_edge_bound(parity_graph.num_edges, p, alpha, beta) + 1e-9
+    sum_vi = int(m.vertices_per_part.sum())
+    assert m.vertex_imbalance <= theorem2_vertex_bound(
+        sum_vi, parity_graph.num_vertices, p, alpha, beta
+    ) + 1e-9
+
+
+# ---------------------------------------------------- hypothesis properties
+
+
+@pytest.mark.parametrize("scorer", SCORERS)
+def test_property_parity_random_graphs(scorer):
+    """Hypothesis sweep: oracle ≡ scan ≡ chunked(B=1, xla) on arbitrary
+    graphs (backends get the deterministic sweep above)."""
+    pytest.importorskip("hypothesis", reason="optional dep: install the 'test' extra")
+    from hypothesis import given, settings, strategies as st
+
+    from repro.core.types import Graph
+
+    @st.composite
+    def graphs(draw):
+        V = draw(st.integers(4, 32))
+        E = draw(st.integers(4, 80))
+        src = draw(st.lists(st.integers(0, V - 1), min_size=E, max_size=E))
+        dst = draw(st.lists(st.integers(0, V - 1), min_size=E, max_size=E))
+        pairs = [(u, v) for u, v in zip(src, dst) if u != v]
+        if not pairs:
+            pairs = [(0, 1)]
+        return Graph(
+            src=np.array([u for u, _ in pairs], np.int32),
+            dst=np.array([v for _, v in pairs], np.int32),
+            num_vertices=V,
+        )
+
+    @settings(max_examples=15, deadline=None)
+    @given(graphs(), st.integers(2, 5))
+    def check(g, p):
+        oracle = streaming_partition_np(g, p, scorer)
+        scan = streaming_scan_partition(g, p, scorer)
+        chunk = streaming_chunked_partition(g, p, scorer, block=1, compute_backend="xla")
+        np.testing.assert_array_equal(np.asarray(scan.part), oracle.part)
+        np.testing.assert_array_equal(np.asarray(chunk.part), oracle.part)
+
+    check()
