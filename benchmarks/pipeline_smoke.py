@@ -9,7 +9,12 @@ EVERY registered engine program (CC, SSSP, BFS, reachability, PageRank —
 all through the one generic `VertexProgram` driver) the host- vs
 fused-driver wall, supersteps/s, dispatch counts, and message stats, plus
 a distributed-PageRank section (sim-vs-dist value match, messages,
-supersteps) run on a forced 8-device host mesh in a subprocess.
+supersteps) run on a forced 8-device host mesh in a subprocess, and a
+serving section (schema 4): batched-vs-sequential throughput at B=8
+through the new `repro.serve` tier (asserted >= 2x), plus a synthetic
+power-law trace replayed through the `GraphQueryServer` admission queue
+(p50/p99 queue latency, padding waste, executable-cache hit rate; the
+cache is asserted to compile at most once per (program, bucket)).
 
 Two speedup figures per engine program:
   - wall_speedup: measured host/fused wall ratio. On a CPU host, dispatch
@@ -115,6 +120,52 @@ def _dist_pagerank_section() -> dict:
     return json.loads(out.stdout.strip().splitlines()[-1])
 
 
+def _serving_section(repeats: int) -> dict:
+    """The serving tier at smoke scale: one batched B=8 dispatch vs 8
+    sequential single-query runs (same facade, same fused driver), then a
+    synthetic power-law trace through the admission queue. Runs on the
+    serve-smoke graph (4K vertices, p=8) — the per-query regime where a
+    production server lives, not the one-big-job regime above."""
+    from repro.serve.trace import synthetic_trace
+
+    B = 8
+    graph = rmat(1 << 12, 40_000, seed=11, a=0.65, b=0.15, c=0.15)
+    pipe = GraphPipeline(graph).partition("ebg_chunked", parts=8)
+    cov = graph.covered_vertices()
+    srcs = [int(v) for v in cov[np.argsort(-graph.degrees()[cov])[:B]]]
+
+    batch_run = pipe.run_batch("bfs", srcs)  # warmup doubles as the parity run
+    singles = [pipe.run("bfs", source=s) for s in srcs]
+    for i in range(B):  # the serving tier's core claim, held in CI too
+        assert np.array_equal(batch_run.values[i], singles[i].values), i
+        assert batch_run.stats[i].supersteps == singles[i].stats.supersteps, i
+    seq_wall = _med(lambda: [pipe.run("bfs", source=s) for s in srcs], repeats)
+    batch_wall = _med(lambda: pipe.run_batch("bfs", srcs), repeats)
+    speedup = seq_wall / batch_wall
+
+    server = pipe.serve(max_batch=B, max_delay_s=0.005)
+    trace = synthetic_trace(graph, 96, rate_qps=4000.0, seed=3)
+    report = server.run_trace(trace)  # run_trace pre-warms every (program, bucket)
+    trace_row = report.row()
+
+    assert speedup >= 2.0, (seq_wall, batch_wall)
+    assert trace_row["cache"]["compiles_per_key_max"] <= 1, trace_row["cache"]
+    assert trace_row["queries"] == 96, trace_row
+    return {
+        "graph": {"family": "serve_smoke", "num_vertices": graph.num_vertices,
+                  "num_edges": graph.num_edges, "p": 8},
+        "batch": {
+            "program": "bfs",
+            "B": B,
+            "seq_wall_s": round(seq_wall, 4),
+            "batch_wall_s": round(batch_wall, 4),
+            "throughput_speedup": round(speedup, 2),
+            "supersteps_per_query": batch_run.supersteps_per_query.tolist(),
+        },
+        "trace": trace_row,
+    }
+
+
 def main(repeats: int = 3, out_path: Path = OUT) -> dict:
     # twitter_like family at smoke scale: heavy-tailed rmat, p=32 workers.
     graph = rmat(1 << 14, 200_000, seed=7, a=0.65, b=0.15, c=0.15)
@@ -160,9 +211,10 @@ def main(repeats: int = 3, out_path: Path = OUT) -> dict:
         totals["dispatches_fused"] += 1
 
     dist_pr = _dist_pagerank_section()
+    serving = _serving_section(repeats)
 
     data = {
-        "schema": 3,
+        "schema": 4,
         "graph": {"family": "twitter_like_smoke", "num_vertices": graph.num_vertices,
                   "num_edges": graph.num_edges, "p": P},
         "partition": {"partitioner": "ebg_chunked", "wall_s": round(partition_s, 3)},
@@ -182,6 +234,7 @@ def main(repeats: int = 3, out_path: Path = OUT) -> dict:
             },
         },
         "dist": {"pr": dist_pr},
+        "serving": serving,
     }
     # The structural claims CI holds the line on: the fused driver turns
     # one-dispatch-per-superstep into one dispatch per run, distributed
@@ -205,7 +258,9 @@ def main(repeats: int = 3, out_path: Path = OUT) -> dict:
         f"engine host {e['host_wall_s']:.3f}s "
         f"-> fused {e['fused_wall_s']:.3f}s ({e['wall_speedup']}x wall, "
         f"{e['dispatch_reduction']}x fewer dispatches) | dist pr msgs "
-        f"{dist_pr.get('messages_total')} -> {out_path.name}"
+        f"{dist_pr.get('messages_total')} | serve B=8 "
+        f"{serving['batch']['throughput_speedup']}x, cache hit "
+        f"{serving['trace']['cache']['hit_rate']} -> {out_path.name}"
     )
     return data
 

@@ -9,17 +9,24 @@ export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 python -m pytest -x -q "$@"
 if [ "$#" -gt 0 ]; then
   # Extra args may have filtered out the backend-parity, VertexProgram,
-  # and streaming-scorer suites (xla vs ref vs pallas-interpret engine,
-  # chunked bitset + EdgeScorer scan/chunked/oracle parity, BFS/reach
-  # oracles, distributed PageRank) — always run them, so an engine or
-  # partitioner regression fails loudly in every invocation mode. The
-  # no-arg run above already includes them.
-  python -m pytest -q tests/test_backends.py tests/test_programs.py tests/test_streaming.py
+  # streaming-scorer, and serving suites (xla vs ref vs pallas-interpret
+  # engine, chunked bitset + EdgeScorer scan/chunked/oracle parity,
+  # BFS/reach oracles, distributed PageRank, batched-BSP/server parity) —
+  # always run them, so an engine, partitioner, or serving regression
+  # fails loudly in every invocation mode. The no-arg run above already
+  # includes them.
+  python -m pytest -q tests/test_backends.py tests/test_programs.py tests/test_streaming.py tests/test_serve.py
 else
   # Benchmark smoke: partition -> build -> engine at p=32, emitting
   # BENCH_pipeline.json (partition/build walls, Table-III quality row per
   # streaming EdgeScorer, per-program supersteps/s and messages for every
   # registered VertexProgram, host-vs-fused driver comparison,
-  # distributed-PageRank section) so the perf trajectory is tracked.
+  # distributed-PageRank section, and the schema-4 serving section:
+  # batched-vs-sequential throughput + trace replay through the
+  # GraphQueryServer) so the perf trajectory is tracked.
   python -m benchmarks.pipeline_smoke
 fi
+# Serving smoke trace: a tiny end-to-end replay through the admission
+# queue + executable cache, in BOTH invocation modes — a broken server
+# loop fails CI even when pytest args filter the serving suite out.
+python -m repro.launch.graph_serve --vertices 1024 --edges 8000 --parts 4 --queries 32 --rate 4000

@@ -35,7 +35,7 @@ from repro.api.registry import (
     register_partitioner,
 )
 
-_LAZY = ("GraphPipeline", "PipelineRun", "SubgraphSpec", "LoweredBSP")
+_LAZY = ("GraphPipeline", "PipelineRun", "BatchRun", "SubgraphSpec", "LoweredBSP")
 
 __all__ = [
     "COMPUTE_BACKENDS",

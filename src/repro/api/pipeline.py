@@ -46,6 +46,7 @@ from repro.graph.engine import (
     check_int32_kernel_labels,
     get_program,
     make_distributed_stepper,
+    run_bsp_batch,
     subgraphs_to_arrays,
 )
 
@@ -352,6 +353,54 @@ class GraphPipeline:
             raise ValueError(f"unknown mode {mode!r}; expected 'sim' or 'dist'")
         return PipelineRun(pipeline=self, program=prog.name, values=values, stats=stats, subgraphs=sub)
 
+    def run_batch(
+        self,
+        program: ProgramLike = "cc",
+        sources=None,
+        *,
+        batch: Optional[int] = None,
+        symmetrize: Optional[bool] = None,
+        pad_multiple: Optional[int] = None,
+        compute_backend: Optional[str] = None,
+        **kw,
+    ) -> "BatchRun":
+        """Run a [B] batch of point queries of ONE program in a single
+        fused dispatch over the shared subgraph structure.
+
+        Source-rooted programs (SSSP/BFS) take `sources` — a [B] sequence
+        of vertex ids, each validated before anything runs; source-free
+        programs take `batch` (B identical whole-graph queries). Each
+        query's values and `BSPStats` are bit-identical to a one-source
+        `.run` call: convergence masking freezes finished queries while
+        stragglers run, and per-query stats report the supersteps that
+        query actually paid. For a persistent admission-queue/cache
+        serving loop over the same machinery, use `.serve()`.
+        """
+        prog = _resolve_program(program)
+        prog, kw = _translate_engine_kwargs(prog, kw)
+        if compute_backend is not None:
+            kw["compute_backend"] = check_compute_backend(compute_backend)
+        sub = self.subgraphs_for(**self._build_params_for(prog, symmetrize, pad_multiple))
+        vals, stats = run_bsp_batch(
+            sub, prog, sources, batch=batch, num_vertices=self.graph.num_vertices, **kw
+        )
+        return BatchRun(
+            pipeline=self,
+            program=prog.name,
+            values=np.asarray(vals[:, :, :-1]),
+            stats=stats,
+            subgraphs=sub,
+            sources=tuple(int(s) for s in sources) if sources is not None else None,
+        )
+
+    def serve(self, **server_kwargs) -> "GraphQueryServer":
+        """Open a persistent query-serving session over this pipeline's
+        partitioned graph (admission queue, micro-batching, warm compiled
+        executables — see `repro.serve.GraphQueryServer` for the knobs)."""
+        from repro.serve import GraphQueryServer
+
+        return GraphQueryServer(self, **server_kwargs)
+
     def _run_distributed(
         self,
         prog: VertexProgram,
@@ -497,3 +546,32 @@ class PipelineRun:
         """Distinct CC labels over covered vertices."""
         cov = self.pipeline.graph.covered_vertices()
         return int(np.unique(self.to_global()[cov]).shape[0])
+
+
+@dataclasses.dataclass
+class BatchRun:
+    """Result of one `GraphPipeline.run_batch`: [B] queries of one program
+    answered in one fused dispatch. `query(i)` views query i as a normal
+    `PipelineRun` (same `.to_global()`, `.stats`, ... surface)."""
+
+    pipeline: GraphPipeline
+    program: str
+    values: np.ndarray  # [B, p, max_v]
+    stats: list  # [B] per-query BSPStats (each query's OWN supersteps)
+    subgraphs: SubgraphSet
+    sources: Optional[tuple]
+
+    def __len__(self) -> int:
+        return self.values.shape[0]
+
+    def query(self, i: int) -> PipelineRun:
+        return PipelineRun(
+            pipeline=self.pipeline, program=self.program,
+            values=self.values[i], stats=self.stats[i], subgraphs=self.subgraphs,
+        )
+
+    @property
+    def supersteps_per_query(self) -> np.ndarray:
+        """Supersteps each query actually paid under convergence masking
+        (NOT B copies of the batch max)."""
+        return np.asarray([s.supersteps for s in self.stats])

@@ -41,6 +41,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import time
 from typing import Callable, Optional
 
 import jax
@@ -233,6 +234,26 @@ def program_names() -> tuple:
 # ------------------------------------------------------------- init values
 
 
+def check_source(sub: SubgraphSet, source, num_vertices: int = 0) -> int:
+    """Validate a query source vertex id and return it as a Python int.
+
+    Source-rooted inits (SSSP/BFS) must fail fast on an out-of-range
+    source — silently accepting one returns an all-INF "answer" that looks
+    like an unreachable graph. The valid range is [0, num_vertices) when
+    the caller knows the global vertex count, else [0, max covered gid]
+    (the tightest bound the subgraph tensors themselves carry). The serving
+    tier validates at admission time so one bad source rejects that query
+    alone instead of poisoning a whole micro-batch.
+    """
+    if source is None:
+        raise ValueError("source must be a vertex id, got None")
+    s = int(source)
+    hi = int(num_vertices) if num_vertices > 0 else int(jnp.max(sub.gid)) + 1
+    if not 0 <= s < hi:
+        raise ValueError(f"source={s} is out of range: valid vertex ids are [0, {hi})")
+    return s
+
+
 def init_cc(sub: SubgraphSet, *, num_vertices: int = 0, source=None) -> jax.Array:
     p = sub.gid.shape[0]
     val = jnp.where(sub.vmask, sub.gid, INF_I32)
@@ -240,6 +261,7 @@ def init_cc(sub: SubgraphSet, *, num_vertices: int = 0, source=None) -> jax.Arra
 
 
 def init_sssp(sub: SubgraphSet, source: int, *, num_vertices: int = 0) -> jax.Array:
+    source = check_source(sub, source, num_vertices)
     p = sub.gid.shape[0]
     val = jnp.where(sub.gid == source, 0.0, INF_F32).astype(jnp.float32)
     return jnp.concatenate([val, jnp.full((p, 1), INF_F32, jnp.float32)], axis=1)
@@ -254,6 +276,7 @@ def init_pr(sub: SubgraphSet, num_vertices: int, *, source=None) -> jax.Array:
 
 
 def init_bfs(sub: SubgraphSet, source: int, *, num_vertices: int = 0) -> jax.Array:
+    source = check_source(sub, source, num_vertices)
     p = sub.gid.shape[0]
     val = jnp.where(sub.gid == source, 0, INF_I32).astype(jnp.int32)
     return jnp.concatenate([val, jnp.full((p, 1), INF_I32, jnp.int32)], axis=1)
@@ -276,7 +299,9 @@ CC = register_program(VertexProgram(
 
 SSSP = register_program(VertexProgram(
     name="sssp", dtype="float32", combine="min", weight="edge",
-    init_fn=lambda sub, *, num_vertices=0, source=None: init_sssp(sub, int(source)),
+    init_fn=lambda sub, *, num_vertices=0, source=None: init_sssp(
+        sub, source, num_vertices=num_vertices
+    ),
     needs_source=True,
 ))
 
@@ -290,7 +315,9 @@ PR = register_program(VertexProgram(
 
 BFS = register_program(VertexProgram(
     name="bfs", dtype="int32", combine="min", weight="unit",
-    init_fn=lambda sub, *, num_vertices=0, source=None: init_bfs(sub, int(source)),
+    init_fn=lambda sub, *, num_vertices=0, source=None: init_bfs(
+        sub, source, num_vertices=num_vertices
+    ),
     needs_source=True,
 ))
 
@@ -801,6 +828,236 @@ def run_bsp(
     msgs_sw = np.asarray(msg_steps).reshape(steps, p)
     iters_sw = np.asarray(iters_steps).reshape(steps, p)
     return (-val if negate else val), _assemble_stats(steps, msgs_sw, iters_sw, edges)
+
+
+# ----------------------------------------------- batched fused sim driver
+#
+# The serving tier runs a [B] batch of point queries over SHARED subgraph
+# structure in one fused dispatch: the generic superstep is vmapped over a
+# leading batch axis and the whole loop is one jitted lax.while_loop. A
+# per-query convergence mask freezes finished queries — their values stop
+# evolving and they stop contributing messages/inner iterations — while
+# stragglers run to their own fixpoint, so per-query BSPStats report the
+# supersteps each query actually paid (not the batch max) and are
+# bit-identical to B separate single-source `run_bsp` runs.
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("prog", "max_supersteps", "inner_cap", "tol", "num_vertices", "backend"),
+    donate_argnums=(1,),
+)
+def _fused_bsp_batch(sub, vals, *, prog, max_supersteps, inner_cap, tol, num_vertices, backend):
+    B = vals.shape[0]
+    p = vals.shape[1]
+    msgs_buf = jnp.zeros((max_supersteps, B, p), jnp.int32)
+    iters_buf = jnp.zeros((max_supersteps, B, p), jnp.int32)
+    # Every step exchanges (exchange_period=1), so the delta-message
+    # reference is the entry value itself — count_ref=None, as in the
+    # specialized period-1 branch of `_fused_bsp`.
+    vstep = jax.vmap(
+        lambda v: _superstep(
+            prog, sub, v, _sim_exchange, inner_cap, True, None, num_vertices, backend
+        )
+    )
+
+    def cond(carry):
+        _, k, done, _, _, _ = carry
+        return ~jnp.all(done) & (k < max_supersteps)
+
+    def body(carry):
+        v, k, done, steps_q, msgs_buf, iters_buf = carry
+        v2, msgs, iters, delta = vstep(v)
+        if prog.convergence == "tol":
+            newly = (delta < tol) if tol else jnp.zeros((B,), bool)
+        else:
+            newly = ~jnp.any(v2 != v, axis=(1, 2))
+        # Convergence masking: finished queries keep their values and send
+        # nothing while stragglers run.
+        v2 = jnp.where(done[:, None, None], v, v2)
+        msgs = jnp.where(done[:, None], 0, msgs)
+        iters = jnp.where(done[:, None], 0, iters)
+        steps_q = steps_q + (~done).astype(jnp.int32)
+        done = done | newly
+        return v2, k + 1, done, steps_q, msgs_buf.at[k].set(msgs), iters_buf.at[k].set(iters)
+
+    carry = (vals, jnp.int32(0), jnp.zeros((B,), bool), jnp.zeros((B,), jnp.int32),
+             msgs_buf, iters_buf)
+    vals, _, _, steps_q, msgs_buf, iters_buf = jax.lax.while_loop(cond, body, carry)
+    edges = jnp.sum(sub.edge_mask, axis=1, dtype=jnp.int32)
+    return vals, steps_q, msgs_buf, iters_buf, edges
+
+
+def batch_init(prog, sub: SubgraphSet, sources=None, *, batch: Optional[int] = None,
+               num_vertices: int = 0) -> jax.Array:
+    """[B, p, max_v+1] initial values for a batch of point queries.
+
+    Source-rooted programs take `sources` (a [B] sequence of vertex ids),
+    each validated BEFORE any init is built — one bad source fails fast
+    with the offending id named instead of poisoning the whole batch.
+    Source-free programs (CC/PR/reach: whole-graph queries) take `batch`
+    (or infer it from len(sources)) and tile one init B times.
+    """
+    prog = get_program(prog)
+    if prog.needs_source:
+        if sources is None:
+            raise ValueError(
+                f"program {prog.name!r} is source-rooted: pass sources= (a [B] "
+                "sequence of vertex ids)"
+            )
+        for s in sources:
+            check_source(sub, s, num_vertices)
+        return jnp.stack(
+            [prog.init(sub, num_vertices=num_vertices, source=s) for s in sources]
+        )
+    if batch is None:
+        batch = len(sources) if sources is not None else 0
+    if batch < 1:
+        raise ValueError(
+            f"program {prog.name!r} is source-free: pass batch= (or sources= "
+            "to size the batch)"
+        )
+    one = prog.init(sub, num_vertices=num_vertices)
+    return jnp.tile(one[None], (int(batch), 1, 1))
+
+
+def _assemble_batch_stats(steps_q, msgs_sbw, iters_sbw, edges) -> list:
+    """Per-query BSPStats from the batched [S, B, p] buffers: query b's
+    series is truncated to the supersteps IT paid under masking."""
+    edges = edges.astype(np.int64)
+    return [
+        _assemble_stats(
+            int(steps_q[b]),
+            msgs_sbw[: int(steps_q[b]), b].astype(np.int64),
+            iters_sbw[: int(steps_q[b]), b].astype(np.int64),
+            edges,
+        )
+        for b in range(msgs_sbw.shape[1])
+    ]
+
+
+def _resolve_batch_args(sub, program, *, max_supersteps, num_vertices, compute_backend,
+                        exchange_period=1):
+    prog = get_program(program)
+    check_int32_kernel_labels(prog, sub, compute_backend)
+    check_pagerank_num_vertices(prog, num_vertices)
+    if exchange_period != 1:
+        raise ValueError(
+            "the batched driver always exchanges every superstep; "
+            f"exchange_period={exchange_period} is not supported — run staleness "
+            "experiments through single-query run_bsp"
+        )
+    if max_supersteps is None:
+        max_supersteps = prog.default_steps or 200
+    return prog, max_supersteps
+
+
+def run_bsp_batch(
+    sub: SubgraphSet,
+    program,
+    sources=None,
+    init_vals: Optional[jax.Array] = None,
+    *,
+    batch: Optional[int] = None,
+    max_supersteps: Optional[int] = None,
+    inner_cap: int = 10_000,
+    exchange_period: int = 1,
+    tol: float = 0.0,
+    num_vertices: int = 0,
+    compute_backend: str = "xla",
+) -> tuple[jax.Array, list]:
+    """Batched multi-source BSP: B queries of one program in ONE fused
+    dispatch over shared subgraph structure.
+
+    Returns (values [B, p, max_v+1], per-query BSPStats list) — each query's
+    values AND stats are bit-identical to a single-source `run_bsp` call
+    (tests/test_serve.py pins this across programs × backends). Like the
+    single-query fused driver, the initial value buffer is DONATED.
+    """
+    prog, max_supersteps = _resolve_batch_args(
+        sub, program, max_supersteps=max_supersteps, num_vertices=num_vertices,
+        compute_backend=compute_backend, exchange_period=exchange_period,
+    )
+    if init_vals is None:
+        init_vals = batch_init(prog, sub, sources, batch=batch, num_vertices=num_vertices)
+    exec_prog, negate = _exec_view(prog)
+    vals = -init_vals if negate else init_vals
+    vals, steps_q, msgs_buf, iters_buf, edges = _fused_bsp_batch(
+        sub, vals, prog=exec_prog, max_supersteps=max_supersteps, inner_cap=inner_cap,
+        tol=tol, num_vertices=num_vertices, backend=compute_backend,
+    )
+    DISPATCH_COUNTS["batch"] += 1
+    steps_q, msgs_sbw, iters_sbw, edges = jax.device_get((steps_q, msgs_buf, iters_buf, edges))
+    return (-vals if negate else vals), _assemble_batch_stats(steps_q, msgs_sbw, iters_sbw, edges)
+
+
+@dataclasses.dataclass
+class BatchExecutable:
+    """AOT-compiled batched BSP loop for one (program, padded batch size).
+
+    The serving tier's executable-cache value: `compile_batch_executable`
+    lowers `_fused_bsp_batch` once for a fixed [B, p, max_v+1] value shape,
+    and `run` replays it with zero retracing — steady-state queries never
+    recompile. Negation (max-combine programs) and per-query stats assembly
+    live in the wrapper, outside the compiled program.
+    """
+
+    program: VertexProgram
+    sub: SubgraphSet
+    batch: int
+    negate: bool
+    compiled: object
+    compile_s: float
+
+    def run(self, init_vals: jax.Array) -> tuple[jax.Array, list]:
+        """Same contract as `run_bsp_batch` (init_vals is donated)."""
+        if init_vals.shape[0] != self.batch:
+            raise ValueError(
+                f"executable compiled for batch {self.batch}, got {init_vals.shape[0]} "
+                "— pad the batch to its bucket first"
+            )
+        vals = -init_vals if self.negate else init_vals
+        vals, steps_q, msgs_buf, iters_buf, edges = self.compiled(self.sub, vals)
+        DISPATCH_COUNTS["batch"] += 1
+        steps_q, msgs_sbw, iters_sbw, edges = jax.device_get(
+            (steps_q, msgs_buf, iters_buf, edges)
+        )
+        return (
+            -vals if self.negate else vals
+        ), _assemble_batch_stats(steps_q, msgs_sbw, iters_sbw, edges)
+
+
+def compile_batch_executable(
+    sub: SubgraphSet,
+    program,
+    batch: int,
+    *,
+    max_supersteps: Optional[int] = None,
+    inner_cap: int = 10_000,
+    tol: float = 0.0,
+    num_vertices: int = 0,
+    compute_backend: str = "xla",
+) -> BatchExecutable:
+    """AOT-lower + compile the batched fused BSP loop for a fixed padded
+    batch size (the warm path behind `repro.serve`'s executable cache)."""
+    prog, max_supersteps = _resolve_batch_args(
+        sub, program, max_supersteps=max_supersteps, num_vertices=num_vertices,
+        compute_backend=compute_backend,
+    )
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    exec_prog, negate = _exec_view(prog)
+    dt = jnp.int32 if prog.dtype == "int32" else jnp.float32
+    spec = jax.ShapeDtypeStruct((int(batch), sub.num_parts, sub.max_v + 1), dt)
+    t0 = time.perf_counter()
+    compiled = _fused_bsp_batch.lower(
+        sub, spec, prog=exec_prog, max_supersteps=max_supersteps, inner_cap=inner_cap,
+        tol=tol, num_vertices=num_vertices, backend=compute_backend,
+    ).compile()
+    return BatchExecutable(
+        program=prog, sub=sub, batch=int(batch), negate=negate, compiled=compiled,
+        compile_s=time.perf_counter() - t0,
+    )
 
 
 # ------------------------------------------------- distributed (shard_map)

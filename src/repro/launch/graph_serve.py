@@ -1,0 +1,81 @@
+"""Graph-query serving driver: replay a synthetic power-law query trace
+through the persistent `GraphQueryServer` and report serving metrics
+(throughput, p50/p99 queue latency, padding waste, executable-cache hit
+rate) as one JSON line.
+
+  PYTHONPATH=src python -m repro.launch.graph_serve --queries 200 --rate 2000
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.api import GraphPipeline
+from repro.graph.generate import rmat
+from repro.serve.trace import synthetic_trace
+
+
+def run_graph_serve(
+    *,
+    num_vertices: int = 1 << 12,
+    num_edges: int = 40_000,
+    parts: int = 8,
+    partitioner: str = "ebg_chunked",
+    queries: int = 200,
+    rate_qps: float = 2000.0,
+    max_batch: int = 8,
+    max_delay_s: float = 0.005,
+    programs: tuple = ("bfs", "sssp"),
+    compute_backend: str = "xla",
+    seed: int = 0,
+) -> dict:
+    """Build graph → partition → serve a trace; returns the report row
+    plus the setup facts (the `pipeline_smoke` serving section reuses the
+    same path at smoke scale)."""
+    graph = rmat(num_vertices, num_edges, seed=seed, a=0.65, b=0.15, c=0.15)
+    pipe = GraphPipeline(graph).partition(partitioner, parts=parts)
+    server = pipe.serve(
+        max_batch=max_batch, max_delay_s=max_delay_s, compute_backend=compute_backend
+    )
+    trace = synthetic_trace(
+        graph, queries, rate_qps=rate_qps,
+        mix=tuple((p, 1.0) for p in programs), seed=seed,
+    )
+    report = server.run_trace(trace)
+    return {
+        "graph": {"num_vertices": graph.num_vertices, "num_edges": graph.num_edges,
+                  "p": parts, "partitioner": partitioner},
+        "trace": {"queries": queries, "rate_qps": rate_qps,
+                  "programs": list(programs), "max_batch": max_batch,
+                  "max_delay_s": max_delay_s},
+        **report.row(),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--vertices", type=int, default=1 << 12)
+    ap.add_argument("--edges", type=int, default=40_000)
+    ap.add_argument("--parts", type=int, default=8)
+    ap.add_argument("--partitioner", default="ebg_chunked")
+    ap.add_argument("--queries", type=int, default=200)
+    ap.add_argument("--rate", type=float, default=2000.0, help="arrival rate (queries/s)")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-delay-ms", type=float, default=5.0)
+    ap.add_argument("--programs", default="bfs,sssp", help="comma-separated program mix")
+    ap.add_argument("--backend", default="xla", choices=("xla", "ref", "pallas"))
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    out = run_graph_serve(
+        num_vertices=args.vertices, num_edges=args.edges, parts=args.parts,
+        partitioner=args.partitioner, queries=args.queries, rate_qps=args.rate,
+        max_batch=args.max_batch, max_delay_s=args.max_delay_ms / 1000.0,
+        programs=tuple(p.strip() for p in args.programs.split(",") if p.strip()),
+        compute_backend=args.backend, seed=args.seed,
+    )
+    print(json.dumps(out))
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,7 @@ from repro import configs
 from repro.models.steps import make_prefill_step, make_serve_step
 from repro.models.transformer import init_params
 from repro.launch.train import preset_config, PRESETS
+from repro.serve.padding import bucket_size, pad_batch_rows
 
 
 def generate(cfg, params, prompt_tokens, max_new: int, max_seq: int):
@@ -44,12 +45,22 @@ def main(argv=None):
     cfg = configs.reduced_config(args.arch) if args.arch else preset_config(args.preset)
     params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
     rng = np.random.default_rng(0)
-    prompt = jnp.asarray(rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32)
+    # Same padded-shape policy as the graph-query server: pad the request
+    # batch to its bucket so compiled prefill/decode shapes stay bounded,
+    # run padded, return only the real rows.
+    bucket = bucket_size(args.batch)
+    prompt_np = pad_batch_rows(
+        rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), bucket
+    )
+    prompt = jnp.asarray(prompt_np, jnp.int32)
     t0 = time.time()
-    out = generate(cfg, params, prompt, args.tokens, args.prompt_len + args.tokens)
+    out = generate(cfg, params, prompt, args.tokens, args.prompt_len + args.tokens)[: args.batch]
     dt = time.time() - t0
     total = args.batch * args.tokens
-    print(f"generated {total} tokens in {dt:.2f}s ({total/dt:.1f} tok/s)")
+    print(
+        f"generated {total} tokens in {dt:.2f}s ({total/dt:.1f} tok/s, "
+        f"batch {args.batch} padded to bucket {bucket})"
+    )
     print("sample:", np.asarray(out[0][:16]))
     assert np.isfinite(dt)
     return out

@@ -1,0 +1,36 @@
+"""repro.serve — the graph-query serving tier.
+
+Turns the one-shot partition → build → run pipeline into a persistent
+query server over a shared partitioned graph: an admission queue
+micro-batches point queries per program (`repro.serve.queue`), batches are
+padded to a small set of bucket sizes (`repro.serve.padding`, shared with
+the LM serving loop in `repro.launch.serve`), and each (program, bucket)
+executes through a warm AOT-compiled batched BSP executable
+(`repro.serve.cache` + `repro.graph.engine.compile_batch_executable`) so
+steady-state traffic never recompiles. Per-query results and `BSPStats`
+are bit-identical to single-source `run_bsp` calls — convergence masking
+means a query pays only its own supersteps, not the batch max.
+
+Entry points: `GraphPipeline.serve()` returns a `GraphQueryServer`;
+`GraphPipeline.run_batch()` is the one-shot batched call; the
+`repro.launch.graph_serve` CLI replays a synthetic power-law trace.
+"""
+from repro.serve.cache import ExecutableCache
+from repro.serve.padding import DEFAULT_BUCKETS, bucket_size, pad_batch_rows, padding_waste
+from repro.serve.queue import AdmissionQueue, Query
+from repro.serve.server import GraphQueryServer, QueryResult, ServerReport
+from repro.serve.trace import synthetic_trace
+
+__all__ = [
+    "AdmissionQueue",
+    "DEFAULT_BUCKETS",
+    "ExecutableCache",
+    "GraphQueryServer",
+    "Query",
+    "QueryResult",
+    "ServerReport",
+    "bucket_size",
+    "pad_batch_rows",
+    "padding_waste",
+    "synthetic_trace",
+]

@@ -1,0 +1,308 @@
+"""`GraphQueryServer` — the persistent graph-query serving loop.
+
+One server wraps one partitioned `GraphPipeline` and answers point
+queries over its shared subgraph structure:
+
+  submit → admission queue (per-program lanes, full/deadline flush) →
+  pad to bucket → warm `BatchExecutable` (compiled once per
+  (program, bucket) key) → one fused batched BSP dispatch →
+  per-query results + `BSPStats`.
+
+Per-query answers are bit-identical to single-source `run_bsp` calls:
+padding lanes repeat a real query and are discarded after execution, and
+convergence masking means each query's stats report the supersteps IT
+paid, not the batch max.
+
+Time is explicit rather than wall-clock-implicit so the server is
+drivable both live (`submit()` + `pump()` with real timestamps) and in
+simulation (`run_trace` replays a synthetic trace on a virtual clock,
+charging real execution walls against it) — the same single-server
+queueing discipline either way.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.api.config import check_compute_backend
+from repro.graph.engine import (
+    BSPStats,
+    batch_init,
+    check_source,
+    compile_batch_executable,
+    get_program,
+)
+from repro.serve.cache import ExecutableCache
+from repro.serve.padding import DEFAULT_BUCKETS, bucket_size, pad_items, padding_waste
+from repro.serve.queue import AdmissionQueue, Query
+
+
+@dataclasses.dataclass
+class QueryResult:
+    """One answered query: values are [p, max_v] (dump slot stripped),
+    stats are THIS query's BSPStats under masking (its own superstep
+    count). `batch`/`bucket` record the micro-batch it rode in."""
+
+    qid: int
+    program: str
+    source: Optional[int]
+    values: np.ndarray
+    stats: BSPStats
+    t_arrival: float
+    t_done: float
+    batch: int
+    bucket: int
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_done - self.t_arrival
+
+    @property
+    def supersteps(self) -> int:
+        return self.stats.supersteps
+
+
+@dataclasses.dataclass
+class ServerReport:
+    """Aggregate serving metrics over everything the server answered."""
+
+    queries: int
+    wall_s: float
+    throughput_qps: float
+    latency_p50_s: float
+    latency_p99_s: float
+    batches: int
+    mean_batch: float
+    padding_waste: float
+    supersteps_mean: float
+    cache: dict
+
+    def row(self) -> dict:
+        return {
+            "queries": self.queries,
+            "wall_s": round(self.wall_s, 4),
+            "throughput_qps": round(self.throughput_qps, 1),
+            "latency_p50_s": round(self.latency_p50_s, 5),
+            "latency_p99_s": round(self.latency_p99_s, 5),
+            "batches": self.batches,
+            "mean_batch": round(self.mean_batch, 2),
+            "padding_waste": round(self.padding_waste, 4),
+            "supersteps_mean": round(self.supersteps_mean, 2),
+            "cache": self.cache,
+        }
+
+
+class GraphQueryServer:
+    """See module docstring. Knobs:
+
+    max_batch / max_delay_s — the admission queue's flush policy (full
+    batch fires immediately; a lone query waits at most max_delay_s).
+    buckets — padded-batch ladder; defaults to the shared power-of-two
+    ladder truncated at max_batch's bucket.
+    max_supersteps / inner_cap / tol / compute_backend — engine knobs
+    baked into every compiled executable (part of the cache key).
+    """
+
+    def __init__(
+        self,
+        pipeline,
+        *,
+        max_batch: int = 8,
+        max_delay_s: float = 0.005,
+        buckets=None,
+        compute_backend: str = "xla",
+        max_supersteps: Optional[int] = None,
+        inner_cap: int = 10_000,
+        tol: float = 0.0,
+    ):
+        if pipeline.graph is None:
+            raise RuntimeError("abstract (from_spec) pipelines cannot serve queries")
+        pipeline._stage()  # require a partition stage up front
+        top = bucket_size(max_batch, DEFAULT_BUCKETS if buckets is None else buckets)
+        self.buckets = (
+            tuple(b for b in DEFAULT_BUCKETS if b <= top) if buckets is None else tuple(buckets)
+        )
+        if bucket_size(max_batch, self.buckets) > max_batch:
+            raise ValueError(
+                f"buckets {self.buckets} cannot hold a full batch of {max_batch} "
+                "without padding — include max_batch's bucket"
+            )
+        self.pipeline = pipeline
+        self.compute_backend = check_compute_backend(compute_backend)
+        self.max_supersteps = max_supersteps
+        self.inner_cap = inner_cap
+        self.tol = tol
+        self.queue = AdmissionQueue(max_batch=max_batch, max_delay_s=max_delay_s)
+        self.cache = ExecutableCache()
+        self._results: dict[int, QueryResult] = {}
+        self._batch_log: list[tuple] = []  # (program, n_real, bucket, exec_wall_s)
+        self._next_qid = 0
+        self._clock = 0.0
+
+    # ------------------------------------------------------------ admission
+
+    def submit(self, program, source: Optional[int] = None, *, at: Optional[float] = None) -> int:
+        """Admit one query; returns its qid. Source-rooted programs
+        validate `source` HERE — a bad source rejects this query alone,
+        before it can join (and poison) a micro-batch."""
+        prog = get_program(program)
+        sub = self._sub_for(prog)
+        if prog.needs_source:
+            source = check_source(sub, source, self.pipeline.graph.num_vertices)
+        elif source is not None:
+            raise ValueError(
+                f"program {prog.name!r} is a whole-graph query; source= does not apply"
+            )
+        at = self._clock if at is None else float(at)
+        self._clock = max(self._clock, at)
+        qid = self._next_qid
+        self._next_qid += 1
+        self.queue.push(Query(qid=qid, program=prog.name, source=source, t_arrival=at))
+        return qid
+
+    def pump(self, now: Optional[float] = None) -> int:
+        """Execute every micro-batch due at `now` (full lanes plus lanes
+        past their deadline). Returns the number of queries answered."""
+        now = self._clock if now is None else float(now)
+        self._clock = max(self._clock, now)
+        done = 0
+        for batch in self.queue.pop_due(self._clock):
+            self._clock = self._execute(batch, self._clock)
+            done += len(batch)
+        return done
+
+    def drain(self) -> int:
+        """Force-flush everything still queued."""
+        done = 0
+        for batch in self.queue.pop_all():
+            self._clock = self._execute(batch, self._clock)
+            done += len(batch)
+        return done
+
+    def result(self, qid: int) -> QueryResult:
+        if qid not in self._results:
+            raise KeyError(f"query {qid} has no result yet (still queued? call pump/drain)")
+        return self._results[qid]
+
+    # ------------------------------------------------------------ execution
+
+    def _sub_for(self, prog):
+        """The program's build of the shared partition (bidirectional
+        programs run the symmetrized build), cached by the pipeline."""
+        return self.pipeline.subgraphs_for(**self.pipeline._build_params_for(prog, None, None))
+
+    def _key_for(self, prog, sub, bucket: int) -> tuple:
+        return (
+            prog.name, int(bucket), sub.num_parts, sub.max_v, sub.max_e, sub.max_msg,
+            prog.dtype, self.compute_backend, self.max_supersteps, self.inner_cap, self.tol,
+        )
+
+    def _executable(self, prog, sub, bucket: int):
+        return self.cache.get(
+            self._key_for(prog, sub, bucket),
+            lambda: compile_batch_executable(
+                sub, prog, bucket,
+                max_supersteps=self.max_supersteps, inner_cap=self.inner_cap, tol=self.tol,
+                num_vertices=self.pipeline.graph.num_vertices,
+                compute_backend=self.compute_backend,
+            ),
+        )
+
+    def warm(self, programs, buckets=None) -> float:
+        """Precompile executables for `programs` × `buckets` (default: the
+        server's whole ladder) so live traffic never pays a compile.
+        Returns total compile seconds."""
+        t0 = time.perf_counter()
+        for program in programs:
+            prog = get_program(program)
+            sub = self._sub_for(prog)
+            for b in (self.buckets if buckets is None else buckets):
+                self._executable(prog, sub, int(b))
+        return time.perf_counter() - t0
+
+    def _execute(self, queries: list, t_start: float) -> float:
+        """Run one micro-batch; returns its completion time (t_start plus
+        the real execution wall — the virtual clock is charged what the
+        hardware actually took)."""
+        prog = get_program(queries[0].program)
+        sub = self._sub_for(prog)
+        bucket = bucket_size(len(queries), self.buckets)
+        exe = self._executable(prog, sub, bucket)
+        nv = self.pipeline.graph.num_vertices
+        t0 = time.perf_counter()
+        if prog.needs_source:
+            init = batch_init(
+                prog, sub, pad_items([q.source for q in queries], bucket), num_vertices=nv
+            )
+        else:
+            init = batch_init(prog, sub, batch=bucket, num_vertices=nv)
+        vals, stats = exe.run(init)
+        wall = time.perf_counter() - t0
+        vals = np.asarray(vals[:, :, :-1])  # strip the dump slot; padding lanes dropped below
+        t_done = t_start + wall
+        for i, q in enumerate(queries):
+            self._results[q.qid] = QueryResult(
+                qid=q.qid, program=prog.name, source=q.source, values=vals[i],
+                stats=stats[i], t_arrival=q.t_arrival, t_done=t_done,
+                batch=len(queries), bucket=bucket,
+            )
+        self._batch_log.append((prog.name, len(queries), bucket, wall))
+        return t_done
+
+    # ------------------------------------------------------------- replay
+
+    def run_trace(self, trace, *, warm: bool = True) -> ServerReport:
+        """Replay [(t, program, source)] through the queueing discipline
+        on a virtual clock: arrivals are admitted in time order, a full
+        lane flushes on the admission that fills it, a partial lane
+        flushes when its deadline passes, and each batch's REAL execution
+        wall advances the clock (so queue latency includes waiting behind
+        earlier batches). `warm=True` precompiles every (program, bucket)
+        first — steady-state behaviour, no compile in the latency path."""
+        events = sorted(trace, key=lambda e: e[0])
+        if not events:
+            raise ValueError("empty trace")
+        if warm:
+            self.warm({program for _, program, _ in events})
+        t_first = float(events[0][0])
+        self._clock = max(self._clock, t_first)
+        i = 0
+        while i < len(events) or len(self.queue):
+            deadline = self.queue.next_deadline()
+            if i < len(events) and (deadline is None or events[i][0] <= deadline):
+                t, program, source = events[i]
+                i += 1
+                self._clock = max(self._clock, float(t))
+                self.submit(program, source, at=float(t))
+                for batch in self.queue.pop_full():
+                    self._clock = self._execute(batch, self._clock)
+            else:
+                self._clock = max(self._clock, deadline)
+                for batch in self.queue.pop_due(self._clock):
+                    self._clock = self._execute(batch, self._clock)
+        return self.report(wall_s=self._clock - t_first)
+
+    def report(self, wall_s: Optional[float] = None) -> ServerReport:
+        results = list(self._results.values())
+        if not results:
+            raise RuntimeError("no answered queries to report on")
+        lat = np.asarray([r.latency_s for r in results])
+        if wall_s is None:
+            wall_s = float(max(r.t_done for r in results) - min(r.t_arrival for r in results))
+        reals = sum(n for _, n, _, _ in self._batch_log)
+        pads = sum(b for _, _, b, _ in self._batch_log)
+        return ServerReport(
+            queries=len(results),
+            wall_s=float(wall_s),
+            throughput_qps=len(results) / wall_s if wall_s > 0 else float("inf"),
+            latency_p50_s=float(np.percentile(lat, 50)),
+            latency_p99_s=float(np.percentile(lat, 99)),
+            batches=len(self._batch_log),
+            mean_batch=reals / len(self._batch_log),
+            padding_waste=padding_waste(reals, pads) if pads else 0.0,
+            supersteps_mean=float(np.mean([r.supersteps for r in results])),
+            cache=self.cache.stats(),
+        )
