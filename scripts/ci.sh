@@ -6,6 +6,16 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+# Static-analysis gate (tracer safety, kernel contracts, registry
+# consistency — see docs/api.md "Static analysis"): runs in BOTH
+# invocation modes so a host-sync leak or impl-pair drift fails CI even
+# when pytest args filter the relevant suites out. The no-arg run also
+# emits ANALYSIS_report.json next to BENCH_pipeline.json.
+if [ "$#" -gt 0 ]; then
+  python -m repro.analysis --fail-on-findings
+else
+  python -m repro.analysis --fail-on-findings --json ANALYSIS_report.json
+fi
 python -m pytest -x -q "$@"
 if [ "$#" -gt 0 ]; then
   # Extra args may have filtered out the backend-parity, VertexProgram,

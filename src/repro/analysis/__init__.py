@@ -1,0 +1,33 @@
+"""repro.analysis — tracer-safety and kernel-contract static analyzer.
+
+AST-based checks for the invariants the runtime only sees when the right
+path executes: host-sync leaks in traced code (HS01), the 2^24 exactness
+guard on int->f32 remaps (XD01), ref/pallas kernel impl-pair parity
+(KP01), registry capability consistency and frozen-config purity
+(RC01/RC02), donated-buffer reads (DA01), plus hygiene warnings
+(UI01/DS01/MD01). Run `python -m repro.analysis --help`; the CI gate is
+`python -m repro.analysis --fail-on-findings`.
+"""
+from repro.analysis.core import (
+    Checker,
+    Finding,
+    all_checkers,
+    analyze_paths,
+    analyze_sources,
+    apply_baseline,
+    load_baseline,
+    register_checker,
+    write_baseline,
+)
+
+__all__ = [
+    "Checker",
+    "Finding",
+    "all_checkers",
+    "analyze_paths",
+    "analyze_sources",
+    "apply_baseline",
+    "load_baseline",
+    "register_checker",
+    "write_baseline",
+]

@@ -1,0 +1,189 @@
+"""Shared AST plumbing for the static-analysis checkers.
+
+Everything here is deliberately resolution-light: we canonicalize names
+through each module's import table (``np.asarray`` -> ``numpy.asarray``,
+``lax.scan`` -> ``jax.lax.scan``) and resolve calls to module-local or
+project-local function definitions by name. No type inference, no
+execution — the checkers are grep-with-structure, tuned for zero false
+positives on this repo's idioms.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Iterator, Optional
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for Name/Attribute chains, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def build_import_map(tree: ast.Module) -> dict:
+    """alias -> fully-qualified dotted prefix, from top-level imports.
+
+    ``import numpy as np``                    -> {"np": "numpy"}
+    ``from jax import lax``                   -> {"lax": "jax.lax"}
+    ``from repro.kernels import ref``         -> {"ref": "repro.kernels.ref"}
+    ``from a.b import f as g``                -> {"g": "a.b.f"}
+    """
+    imports: dict = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                imports[alias.asname or alias.name.split(".")[0]] = (
+                    alias.name if alias.asname else alias.name.split(".")[0]
+                )
+        elif isinstance(node, ast.ImportFrom) and node.module and node.level == 0:
+            for alias in node.names:
+                if alias.name == "*":
+                    continue
+                imports[alias.asname or alias.name] = f"{node.module}.{alias.name}"
+    return imports
+
+
+def qualify(name: Optional[str], imports: dict) -> Optional[str]:
+    """Canonicalize a dotted name through the module's import aliases."""
+    if name is None:
+        return None
+    head, sep, rest = name.partition(".")
+    if head in imports:
+        return imports[head] + (sep + rest if rest else "")
+    return name
+
+
+def call_qualname(call: ast.Call, imports: dict) -> Optional[str]:
+    return qualify(dotted_name(call.func), imports)
+
+
+def const_value(node: ast.AST):
+    """Fold pure-literal arithmetic (1 << 24, 2**24, -1) to a Python value;
+    returns None when the expression is not a literal computation."""
+    try:
+        return ast.literal_eval(node)
+    except (ValueError, SyntaxError, TypeError):
+        pass
+    if isinstance(node, ast.BinOp):
+        left, right = const_value(node.left), const_value(node.right)
+        if left is None or right is None:
+            return None
+        try:
+            if isinstance(node.op, ast.LShift):
+                return left << right
+            if isinstance(node.op, ast.Pow):
+                return left**right
+            if isinstance(node.op, ast.Mult):
+                return left * right
+            if isinstance(node.op, ast.Sub):
+                return left - right
+            if isinstance(node.op, ast.Add):
+                return left + right
+        except (TypeError, ValueError, OverflowError):
+            return None
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        inner = const_value(node.operand)
+        return None if inner is None else -inner
+    return None
+
+
+@dataclasses.dataclass
+class FuncInfo:
+    """One function/method definition with its lexical context."""
+
+    qualname: str  # "Class.method" / "outer.<locals>.inner"
+    node: ast.AST  # FunctionDef | AsyncFunctionDef | Lambda
+    parent: Optional["FuncInfo"]  # enclosing function, if any
+    in_class: bool  # direct child of a ClassDef
+
+    @property
+    def name(self) -> str:
+        return getattr(self.node, "name", "<lambda>")
+
+    @property
+    def is_public(self) -> bool:
+        """Module-level functions and class methods not starting with '_'."""
+        return self.parent is None and not self.name.startswith("_")
+
+    def params(self) -> list:
+        a = self.node.args
+        return [p.arg for p in (a.posonlyargs + a.args + a.kwonlyargs)]
+
+    def positional_params(self) -> list:
+        a = self.node.args
+        return [p.arg for p in (a.posonlyargs + a.args)]
+
+
+def iter_functions(tree: ast.Module) -> Iterator[FuncInfo]:
+    """All function definitions with qualnames and parent links."""
+
+    def visit(node, prefix: str, parent: Optional[FuncInfo], in_class: bool):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qn = f"{prefix}{child.name}" if prefix else child.name
+                info = FuncInfo(qualname=qn, node=child, parent=parent, in_class=in_class)
+                yield info
+                yield from visit(child, qn + ".<locals>.", info, False)
+            elif isinstance(child, ast.ClassDef):
+                cp = f"{prefix}{child.name}." if prefix else child.name + "."
+                yield from visit(child, cp, parent, True)
+            else:
+                yield from visit(child, prefix, parent, in_class)
+
+    yield from visit(tree, "", None, False)
+
+
+def local_function_table(tree: ast.Module) -> dict:
+    """name -> module-level FunctionDef node (top level only)."""
+    return {
+        n.name: n
+        for n in tree.body
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+    }
+
+
+def decorator_is_jit(dec: ast.AST, imports: dict) -> bool:
+    """@jax.jit, @jax.jit(...), @functools.partial(jax.jit, ...)."""
+    qn = qualify(dotted_name(dec), imports)
+    if qn in ("jax.jit", "jax.pmap"):
+        return True
+    if isinstance(dec, ast.Call):
+        fn = qualify(dotted_name(dec.func), imports)
+        if fn in ("jax.jit", "jax.pmap"):
+            return True
+        if fn == "functools.partial" and dec.args:
+            return qualify(dotted_name(dec.args[0]), imports) in ("jax.jit", "jax.pmap")
+    return False
+
+
+def jit_call_donated(call: ast.Call, imports: dict) -> Optional[tuple]:
+    """If `call` is jax.jit(...)/functools.partial(jax.jit, ...) carrying a
+    literal donate_argnums, return the donated positions tuple."""
+    fn = qualify(dotted_name(call.func), imports)
+    if fn == "functools.partial" and call.args:
+        if qualify(dotted_name(call.args[0]), imports) != "jax.jit":
+            return None
+    elif fn != "jax.jit":
+        return None
+    for kw in call.keywords:
+        if kw.arg in ("donate_argnums", "donate_argnames"):
+            val = const_value(kw.value)
+            if isinstance(val, int):
+                return (val,)
+            if isinstance(val, (tuple, list)) and all(isinstance(v, int) for v in val):
+                return tuple(val)
+    return None
+
+
+def unparse(node: ast.AST, limit: int = 60) -> str:
+    try:
+        text = ast.unparse(node)
+    except Exception:  # pragma: no cover - unparse is total on 3.9+
+        text = "<expr>"
+    return text if len(text) <= limit else text[: limit - 3] + "..."

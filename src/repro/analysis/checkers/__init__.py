@@ -1,0 +1,15 @@
+"""Checker registration: importing this package populates
+`repro.analysis.core.CHECKERS` via the `@register_checker` decorators.
+
+Add a new checker by dropping a module here that defines a
+`Checker` subclass under `@register_checker` and importing it below
+(see docs/api.md "Static analysis").
+"""
+from repro.analysis.checkers import (  # noqa: F401  (registration side effect)
+    donation,
+    exactness,
+    host_sync,
+    hygiene,
+    kernel_parity,
+    registry_consistency,
+)

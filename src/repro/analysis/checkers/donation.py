@@ -1,0 +1,145 @@
+"""DA01 — donated buffer read after the jitted call.
+
+`donate_argnums` hands the argument's device buffer to the jitted
+computation: after the call returns, the caller's array is deleted on
+accelerators (reads raise "buffer was donated") — but NOT on CPU, where
+donation is a no-op and the stale read silently works. This checker makes
+the accelerator semantics the static contract.
+
+Per module, donating callables are discovered from
+
+  - defs decorated `@functools.partial(jax.jit, donate_argnums=...)` or
+    `@jax.jit(donate_argnums=...)`, and
+  - `name = jax.jit(fn, donate_argnums=...)` aliases,
+
+with literal argnums only. At each call site, a plain variable passed in
+a donated position is tracked through the remaining statements of the
+enclosing body: a read before a rebind is flagged. Rebinding in the same
+statement (`val, stats = f(sub, val)` — the repo's carry idiom) is the
+sanctioned pattern and ends tracking immediately. The scan is linear
+(document order, same statement list); loop-carried donation hazards are
+out of scope.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.astutil import build_import_map, decorator_is_jit, jit_call_donated
+from repro.analysis.core import Checker, register_checker
+
+
+def _donating_callables(tree: ast.Module, imports: dict) -> dict:
+    """name -> (donated positions, callable kind) for this module."""
+    out: dict = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if isinstance(dec, ast.Call) and decorator_is_jit(dec, imports):
+                    donated = jit_call_donated(dec, imports)
+                    if donated:
+                        out[node.name] = donated
+        elif isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            donated = jit_call_donated(node.value, imports)
+            if donated:
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        out[tgt.id] = donated
+    return out
+
+
+def _assigned_names(stmt: ast.stmt) -> set:
+    """Names (re)bound by this statement's targets."""
+    names: set = set()
+    targets = []
+    if isinstance(stmt, ast.Assign):
+        targets = stmt.targets
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign, ast.For, ast.AsyncFor)):
+        targets = [stmt.target]
+    elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+        targets = [i.optional_vars for i in stmt.items if i.optional_vars]
+    for t in targets:
+        for n in ast.walk(t):
+            if isinstance(n, ast.Name):
+                names.add(n.id)
+    return names
+
+
+def _reads(stmt: ast.stmt, name: str):
+    for n in ast.walk(stmt):
+        if isinstance(n, ast.Name) and n.id == name and isinstance(n.ctx, ast.Load):
+            yield n
+
+
+@register_checker
+class DonationChecker(Checker):
+    code = "DA01"
+    name = "donation-after-use"
+    description = (
+        "a variable passed in a donate_argnums position is read again after the "
+        "jitted call without being rebound (deleted buffer on accelerators)"
+    )
+    severity = "error"
+    scope = "module"
+
+    def check_module(self, module, report) -> None:
+        imports = build_import_map(module.tree)
+        donating = _donating_callables(module.tree, imports)
+        if not donating:
+            return
+        for body in self._statement_lists(module.tree):
+            self._scan_body(module, body, donating, report)
+
+    def _statement_lists(self, tree: ast.Module):
+        yield tree.body
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield node.body
+            elif isinstance(node, (ast.For, ast.AsyncFor, ast.While, ast.With, ast.AsyncWith)):
+                yield node.body
+            elif isinstance(node, ast.If):
+                yield node.body
+                yield node.orelse
+            elif isinstance(node, ast.Try):
+                yield node.body
+                yield node.finalbody
+            elif isinstance(node, ast.ExceptHandler):
+                yield node.body
+
+    def _scan_body(self, module, body: list, donating: dict, report) -> None:
+        for idx, stmt in enumerate(body):
+            if not isinstance(
+                stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign, ast.Expr, ast.Return)
+            ):
+                # Compound statements are scanned through their own body
+                # lists — judging a nested call's rebinding against the
+                # OUTER statement would mis-track across branches/functions.
+                continue
+            for call in ast.walk(stmt):
+                if not (
+                    isinstance(call, ast.Call)
+                    and isinstance(call.func, ast.Name)
+                    and call.func.id in donating
+                ):
+                    continue
+                rebound_here = _assigned_names(stmt)
+                for pos in donating[call.func.id]:
+                    if pos >= len(call.args) or not isinstance(call.args[pos], ast.Name):
+                        continue
+                    var = call.args[pos].id
+                    if var in rebound_here:
+                        continue  # `x, ... = f(..., x)` — the sanctioned carry
+                    self._track(module, body[idx + 1 :], var, call, report)
+
+    def _track(self, module, rest: list, var: str, call: ast.Call, report) -> None:
+        for stmt in rest:
+            for read in _reads(stmt, var):
+                report(
+                    module.path, read.lineno, read.col_offset,
+                    f"`{var}` was donated to `{call.func.id}` (line {call.lineno}) and "
+                    "is read here without rebinding — on accelerators this buffer is "
+                    "deleted; rebind the result or pass a fresh array",
+                    anchor=call.func.id,
+                )
+                return
+            if var in _assigned_names(stmt):
+                return

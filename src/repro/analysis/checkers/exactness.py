@@ -1,0 +1,247 @@
+"""XD01 — int→f32 exactness-domain remap reachable without a 2^24 guard.
+
+The kernel backends run int32 semirings in f32 via the INF_I32↔INF_F32
+remap in `engine._local_fixpoint` — exact only for magnitudes below 2^24.
+Every public entry point from which that remap is reachable must pass
+through a dominating guard (`engine.check_int32_kernel_gid`-style:
+compare against `1 << 24`, raise) BEFORE the remap can run. This is the
+static version of the runtime ValueError at engine.py's
+`check_int32_kernel_gid`.
+
+Detection is interprocedural over the analyzed module set:
+
+  - **remap site**: a function whose body both references an `INF_I32`
+    sentinel constant and casts with `.astype(float32)` — the repo's (and
+    this checker's) canonical int-domain remap signature.
+  - **guard**: a function containing a comparison against the constant
+    2^24 (any literal spelling: `1 << 24`, `2 ** 24`, `16777216`)
+    alongside a `raise` (or as an `assert`).
+  - **call graph**: name-resolved edges (module-local defs + `from x
+    import f` / `import x` aliases). Defining a closure counts as
+    reaching whatever the closure reaches (the stepper/runner pattern).
+  - **dominance** (approximation): a remap-reaching call in a top-level
+    statement needs a guard-reaching call in an earlier-or-same top-level
+    statement, unless the callee guards internally. A remap-reaching call
+    inside a nested def needs a guard-reaching call anywhere in the
+    enclosing function (closures run out of definition order).
+
+Only public functions/methods (no leading underscore) are reported —
+private helpers are expected to rely on their callers' guards. `self.*`
+method calls are not resolved; route guard-sensitive flows through
+module-level functions.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.astutil import (
+    build_import_map,
+    const_value,
+    dotted_name,
+    iter_functions,
+    qualify,
+)
+from repro.analysis.core import Checker, register_checker
+
+GUARD_CONST = 1 << 24
+SENTINEL = "INF_I32"
+F32_NAMES = {"jax.numpy.float32", "jnp.float32", "numpy.float32", "float32"}
+
+
+def _own_nodes(fn: ast.AST):
+    """Walk a function's body, pruning nested function/lambda bodies."""
+    stack = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop()
+        yield node
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            stack.extend(ast.iter_child_nodes(node))
+
+
+def _is_f32_cast(node: ast.AST, imports: dict) -> bool:
+    if not (
+        isinstance(node, ast.Call)
+        and isinstance(node.func, ast.Attribute)
+        and node.func.attr == "astype"
+        and node.args
+    ):
+        return False
+    arg = node.args[0]
+    target = qualify(dotted_name(arg), imports)
+    return target in F32_NAMES or (isinstance(arg, ast.Constant) and arg.value == "float32")
+
+
+def _is_remap(fn: ast.AST, imports: dict) -> bool:
+    """INF_I32 reference + .astype(float32) in the same function body."""
+    has_sentinel = has_cast = False
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and SENTINEL in node.id:
+            has_sentinel = True
+        elif isinstance(node, ast.Attribute) and SENTINEL in node.attr:
+            has_sentinel = True
+        elif _is_f32_cast(node, imports):
+            has_cast = True
+        if has_sentinel and has_cast:
+            return True
+    return False
+
+
+def _is_guard(fn: ast.AST) -> bool:
+    """Contains a comparison against 2^24 plus a raise (or an assert)."""
+    has_raise = any(isinstance(n, ast.Raise) for n in ast.walk(fn))
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Compare):
+            sides = [node.left, *node.comparators]
+            if any(const_value(s) == GUARD_CONST for s in sides):
+                in_assert = any(
+                    isinstance(a, ast.Assert) and node in ast.walk(a) for a in ast.walk(fn)
+                )
+                if has_raise or in_assert:
+                    return True
+    return False
+
+
+class _Graph:
+    """Name-resolved project call graph over the analyzed modules."""
+
+    def __init__(self, modules):
+        self.funcs: dict = {}  # key -> (module, FuncInfo)
+        self.by_dotted: dict = {}  # "repro.graph.engine.run_bsp" -> key
+        self.local: dict = {}  # module.path -> {local name -> key}
+        self.imports: dict = {}  # module.path -> import map
+        for m in modules:
+            self.imports[m.path] = build_import_map(m.tree)
+            self.local[m.path] = {}
+            for info in iter_functions(m.tree):
+                key = (m.path, info.qualname)
+                self.funcs[key] = (m, info)
+                if info.parent is None and not info.in_class:
+                    self.by_dotted[f"{m.dotted}.{info.qualname}"] = key
+                    self.local[m.path][info.qualname] = key
+        # Imported aliases resolve cross-module once every def is indexed.
+        for m in modules:
+            for alias, target in self.imports[m.path].items():
+                if target in self.by_dotted:
+                    self.local[m.path].setdefault(alias, self.by_dotted[target])
+
+    def resolve(self, module, name_node: ast.AST):
+        qn = dotted_name(name_node)
+        if qn is None:
+            return None
+        full = qualify(qn, self.imports[module.path])
+        if full in self.by_dotted:
+            return self.by_dotted[full]
+        return self.local[module.path].get(qn)
+
+    def callees(self, key, nodes) -> list:
+        """Function keys referenced (called or passed) in `nodes`."""
+        module, _ = self.funcs[key]
+        out = []
+        for node in nodes:
+            if isinstance(node, (ast.Name, ast.Attribute)):
+                target = self.resolve(module, node)
+                if target is not None and target != key:
+                    out.append(target)
+        return out
+
+    def nested(self, key) -> list:
+        """Keys of functions lexically nested directly under `key`."""
+        module, info = self.funcs[key]
+        prefix = info.qualname + ".<locals>."
+        return [
+            k
+            for k, (m, i) in self.funcs.items()
+            if m.path == module.path
+            and i.qualname.startswith(prefix)
+            and ".<locals>." not in i.qualname[len(prefix):]
+        ]
+
+
+@register_checker
+class ExactnessChecker(Checker):
+    code = "XD01"
+    name = "unguarded-exactness-remap"
+    description = (
+        "public entry point reaches the int->f32 exactness remap (INF_I32 + "
+        ".astype(float32)) without a dominating 1 << 24 guard on the path"
+    )
+    severity = "error"
+    scope = "project"
+
+    def check_project(self, modules, report) -> None:
+        g = _Graph(modules)
+        remap = {k for k, (m, i) in g.funcs.items() if _is_remap(i.node, g.imports[m.path])}
+        guard = {k for k, (_, i) in g.funcs.items() if _is_guard(i.node)}
+        edges = {
+            k: g.callees(k, ast.walk(info.node)) + g.nested(k)
+            for k, (_, info) in g.funcs.items()
+        }
+
+        def reaches(key, targets, seen=None) -> bool:
+            if seen is None:
+                seen = set()
+            if key in seen:
+                return False
+            seen.add(key)
+            if key in targets:
+                return True
+            return any(reaches(c, targets, seen) for c in edges.get(key, ()))
+
+        guarded_memo: dict = {}
+
+        def guarded(key) -> bool:
+            if key in guarded_memo:
+                return guarded_memo[key]
+            guarded_memo[key] = True  # cycle default: lenient
+            guarded_memo[key] = self._guarded(key, g, remap, guard, reaches, guarded)
+            return guarded_memo[key]
+
+        for key in sorted(g.funcs, key=lambda k: (k[0], k[1])):
+            module, info = g.funcs[key]
+            if not info.is_public or ".<locals>." in info.qualname:
+                continue
+            if not reaches(key, remap):
+                continue
+            if guarded(key):
+                continue
+            report(
+                module.path,
+                info.node.lineno,
+                info.node.col_offset,
+                f"`{info.qualname}` reaches the int->f32 exactness remap without a "
+                "dominating 1 << 24 guard; call a check_int32_kernel_gid-style guard "
+                "before the remap on every path",
+                anchor=info.qualname,
+            )
+
+    def _guarded(self, key, g, remap, guard, reaches, guarded) -> bool:
+        if key in guard:
+            return True
+        module, info = g.funcs[key]
+        imports = g.imports[module.path]
+        body = getattr(info.node, "body", [])
+        guard_anywhere = any(reaches(c, guard) for c in g.callees(key, ast.walk(info.node)))
+
+        # Direct (non-nested) remap-reaching calls — and this function's own
+        # remap casts, if it is itself a remap site — need a guard-reaching
+        # call in an earlier-or-same top-level statement.
+        guard_seen = False
+        for stmt in body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue  # closures are judged by the nested-def rule below
+            own = [stmt] + list(_own_nodes(stmt))
+            callees = g.callees(key, own)
+            if any(reaches(c, guard) for c in callees):
+                guard_seen = True
+            for c in callees:
+                if reaches(c, remap) and not guarded(c) and not guard_seen:
+                    return False
+            if key in remap and not guard_seen and any(_is_f32_cast(n, imports) for n in own):
+                return False
+
+        # Remap work inside nested defs (closures returned/registered out of
+        # order) needs a guard-reaching call anywhere in this function.
+        for n in g.nested(key):
+            if reaches(n, remap) and not guarded(n) and not guard_anywhere:
+                return False
+        return True

@@ -1,0 +1,180 @@
+"""KP01 — kernel impl-pair parity for `ops._resolve_impl` entry points.
+
+Every public wrapper in the ops module that dispatches through
+`_resolve_impl` must keep BOTH implementations alive and call-compatible:
+
+  - a **ref branch**: a call into the ref oracle module (`ref.*`), checked
+    for call-compatibility against the oracle's actual signature (arity,
+    unknown/missing keywords) — a drifted oracle signature is exactly the
+    parity bug the runtime A/B suites would catch one release later;
+  - a **pallas branch**: a call to a `*_pallas` implementation that
+    forwards an explicit `interpret=` (so compiled-vs-interpreter stays
+    caller-forceable off-TPU), equally signature-checked when the impl's
+    defining module is in the analyzed set;
+  - **block padding**: an entry point taking a `block_*` parameter must
+    either pad the stream itself (`_pad_to_block` or a `% block` length
+    computation) or forward the parameter to the pallas impl, which then
+    owns the granularity contract.
+
+Pure delegators (entry points that don't call `_resolve_impl`, like
+`segment_max` riding on `segment_min_plus`) are exempt — their parity is
+the delegate's.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.astutil import build_import_map, dotted_name, qualify, unparse
+from repro.analysis.core import Checker, register_checker
+
+RESOLVER = "_resolve_impl"
+PAD_HELPER = "_pad_to_block"
+
+
+def _call_names(fn: ast.AST):
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            yield node, dotted_name(node.func)
+
+
+def _signature_issue(call: ast.Call, impl: ast.FunctionDef):
+    """Call-compatibility of `call` against def `impl`; None when fine."""
+    if any(isinstance(a, ast.Starred) for a in call.args) or any(
+        kw.arg is None for kw in call.keywords
+    ):
+        return None  # *args/**kwargs forwarding: not statically checkable
+    a = impl.args
+    pos = [p.arg for p in a.posonlyargs + a.args]
+    kwonly = [p.arg for p in a.kwonlyargs]
+    npos_given = len(call.args)
+    if a.vararg is None and npos_given > len(pos):
+        return f"passes {npos_given} positional args but `{impl.name}` takes {len(pos)}"
+    given_kw = {kw.arg for kw in call.keywords}
+    if a.kwarg is None:
+        unknown = given_kw - set(pos) - set(kwonly)
+        if unknown:
+            return f"passes unknown keyword(s) {sorted(unknown)} to `{impl.name}`"
+    n_defaults = len(a.defaults)
+    required_pos = pos[: len(pos) - n_defaults]
+    missing = [
+        p for p in required_pos[npos_given:] if p not in given_kw
+    ] + [
+        p
+        for p, d in zip(kwonly, a.kw_defaults)
+        if d is None and p not in given_kw
+    ]
+    if missing:
+        return f"misses required parameter(s) {missing} of `{impl.name}`"
+    return None
+
+
+@register_checker
+class KernelParityChecker(Checker):
+    code = "KP01"
+    name = "kernel-impl-parity"
+    description = (
+        "ops._resolve_impl entry points must keep matching ref and pallas "
+        "implementations (call-compatible signatures, interpret= forwarding, "
+        "block padding)"
+    )
+    severity = "error"
+    scope = "project"
+
+    def check_project(self, modules, report) -> None:
+        by_dotted = {m.dotted: m for m in modules}
+        for m in modules:
+            has_resolver = any(
+                isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)) and n.name == RESOLVER
+                for n in m.tree.body
+            )
+            if has_resolver:
+                self._check_ops_module(m, by_dotted, report)
+
+    def _check_ops_module(self, module, by_dotted, report) -> None:
+        imports = build_import_map(module.tree)
+        # Defs reachable through imports: "ref.segment_min_plus_ref" and the
+        # directly-imported *_pallas names.
+        def find_def(name: str):
+            target = qualify(name, imports)
+            if target is None:
+                return None
+            mod_dotted, _, fname = target.rpartition(".")
+            defmod = by_dotted.get(mod_dotted)
+            if defmod is None:
+                return None
+            for n in defmod.tree.body:
+                if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)) and n.name == fname:
+                    return n
+            return None
+
+        for fn in module.tree.body:
+            if not isinstance(fn, ast.FunctionDef) or fn.name.startswith("_"):
+                continue
+            calls = list(_call_names(fn))
+            if not any(name == RESOLVER for _, name in calls):
+                continue  # pure delegator — parity owned by the delegate
+
+            ref_calls = [
+                (c, name) for c, name in calls if name and "." in name and name.startswith("ref.")
+            ]
+            pallas_calls = [(c, name) for c, name in calls if name and name.endswith("_pallas")]
+
+            if not ref_calls:
+                report(
+                    module.path, fn.lineno, fn.col_offset,
+                    f"`{fn.name}` dispatches through {RESOLVER} but has no ref-oracle "
+                    "branch (no `ref.*` call)",
+                    anchor=fn.name,
+                )
+            if not pallas_calls:
+                report(
+                    module.path, fn.lineno, fn.col_offset,
+                    f"`{fn.name}` dispatches through {RESOLVER} but has no pallas "
+                    "branch (no `*_pallas` call)",
+                    anchor=fn.name,
+                )
+            for call, name in pallas_calls:
+                if not any(kw.arg == "interpret" for kw in call.keywords):
+                    report(
+                        module.path, call.lineno, call.col_offset,
+                        f"`{unparse(call.func)}` call in `{fn.name}` does not forward "
+                        "`interpret=` — compiled-vs-interpreter must stay caller-forceable",
+                        anchor=fn.name,
+                    )
+            for call, name in ref_calls + pallas_calls:
+                impl = find_def(name)
+                if impl is None:
+                    continue
+                issue = _signature_issue(call, impl)
+                if issue:
+                    report(
+                        module.path, call.lineno, call.col_offset,
+                        f"impl-pair signature drift in `{fn.name}`: call {issue}",
+                        anchor=fn.name,
+                    )
+            self._check_padding(module, fn, pallas_calls, report)
+
+    def _check_padding(self, module, fn: ast.FunctionDef, pallas_calls, report) -> None:
+        a = fn.args
+        block_params = [
+            p.arg for p in (a.posonlyargs + a.args + a.kwonlyargs) if p.arg.startswith("block_")
+        ]
+        for block in block_params:
+            pads_locally = any(
+                name == PAD_HELPER for _, name in _call_names(fn)
+            ) or any(
+                isinstance(n, ast.BinOp)
+                and isinstance(n.op, ast.Mod)
+                and block in {d for d in [dotted_name(n.right), dotted_name(n.left)] if d}
+                for n in ast.walk(fn)
+            )
+            forwarded = any(
+                any(kw.arg == block for kw in call.keywords) for call, _ in pallas_calls
+            )
+            if not pads_locally and not forwarded:
+                report(
+                    module.path, fn.lineno, fn.col_offset,
+                    f"`{fn.name}` takes `{block}` but neither pads the stream "
+                    f"({PAD_HELPER} / `% {block}`) nor forwards it to the pallas impl",
+                    anchor=fn.name,
+                )

@@ -1,0 +1,284 @@
+"""Analyzer core: findings, modules, suppressions, baseline, registry.
+
+The pass is two-phase: every target file is parsed once into a `Module`,
+then each registered checker runs either per-module (``scope="module"``)
+or once over the whole module set (``scope="project"`` — the
+interprocedural checkers: call graphs, registry cross-references, kernel
+impl pairs). Findings are filtered through inline/file suppression
+comments and the committed baseline before they reach the CLI.
+
+Suppression syntax (see docs/api.md "Static analysis"):
+
+    x = np.asarray(y)          # repro: ignore[HS01]     one line, one code
+    x = np.asarray(y)          # repro: ignore           one line, all codes
+    # repro: ignore-file[DS01]                           whole file, one code
+    # repro: ignore-file                                 whole file, all codes
+
+``# noqa`` on a line additionally suppresses the hygiene codes (UI01/DS01/
+MD01) so existing flake8-style pragmas keep working.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import hashlib
+import json
+import re
+from pathlib import Path
+from typing import Callable, Iterable, Optional
+
+SEVERITIES = ("error", "warning")
+
+_SUPPRESS_RE = re.compile(r"#\s*repro:\s*ignore(?P<file>-file)?(?:\[(?P<codes>[A-Za-z0-9_,\s]+)\])?")
+_NOQA_RE = re.compile(r"#\s*noqa\b")
+_NOQA_CODES = ("UI01", "DS01", "MD01")  # hygiene codes honor plain `# noqa`
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One checker hit, anchored to a file position."""
+
+    code: str
+    path: str  # repo-relative posix path
+    line: int
+    col: int
+    message: str
+    severity: str = "error"
+    anchor: str = ""  # enclosing symbol (fingerprint stability across edits)
+
+    @property
+    def fingerprint(self) -> str:
+        """Line-number-free identity used by the baseline file."""
+        digest = hashlib.sha256(self.message.encode()).hexdigest()[:12]
+        return f"{self.code}:{self.path}:{self.anchor}:{digest}"
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.code} [{self.severity}] {self.message}"
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["fingerprint"] = self.fingerprint
+        return d
+
+
+@dataclasses.dataclass
+class Module:
+    """One parsed source file."""
+
+    path: str  # repo-relative posix path
+    dotted: str  # best-effort dotted module name ("repro.graph.engine")
+    source: str
+    tree: ast.Module
+    lines: list
+
+    @classmethod
+    def from_source(cls, path: str, source: str) -> "Module":
+        rel = Path(path).as_posix()
+        parts = list(Path(rel).with_suffix("").parts)
+        if "src" in parts:
+            parts = parts[parts.index("src") + 1 :]
+        dotted = ".".join(p for p in parts if p != "__init__")
+        return cls(
+            path=rel,
+            dotted=dotted or rel,
+            source=source,
+            tree=ast.parse(source, filename=rel),
+            lines=source.splitlines(),
+        )
+
+    @property
+    def name(self) -> str:
+        """Last dotted component ("engine" for repro/graph/engine.py)."""
+        return self.dotted.rsplit(".", 1)[-1]
+
+    def line_text(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1]
+        return ""
+
+
+class Checker:
+    """Base class: subclass, set the class attributes, implement one hook."""
+
+    code: str = ""
+    name: str = ""
+    description: str = ""
+    severity: str = "error"
+    scope: str = "module"  # "module" | "project"
+
+    def check_module(self, module: Module, report: Callable) -> None:  # pragma: no cover
+        raise NotImplementedError
+
+    def check_project(self, modules: list, report: Callable) -> None:  # pragma: no cover
+        raise NotImplementedError
+
+
+CHECKERS: dict = {}
+
+
+def register_checker(cls):
+    """Class decorator: register a Checker subclass by its code."""
+    if not cls.code or not cls.code.isalnum():
+        raise ValueError(f"checker {cls!r} needs an alphanumeric `code`")
+    if cls.code in CHECKERS:
+        raise ValueError(f"checker code {cls.code!r} already registered")
+    if cls.severity not in SEVERITIES:
+        raise ValueError(f"checker severity must be one of {SEVERITIES}, got {cls.severity!r}")
+    CHECKERS[cls.code] = cls()
+    return cls
+
+
+def all_checkers() -> tuple:
+    """Registered checker instances, stable order. Importing the checkers
+    package is what populates the registry."""
+    from repro.analysis import checkers  # noqa: F401  (registration side effect)
+
+    return tuple(CHECKERS[c] for c in sorted(CHECKERS))
+
+
+def _suppressed(module: Module, finding: Finding, file_directives: list) -> bool:
+    for codes in file_directives:
+        if codes is None or finding.code in codes:
+            return True
+    text = module.line_text(finding.line)
+    m = _SUPPRESS_RE.search(text)
+    if m and not m.group("file"):
+        codes = m.group("codes")
+        if codes is None or finding.code in {c.strip() for c in codes.split(",")}:
+            return True
+    if finding.code in _NOQA_CODES and _NOQA_RE.search(text):
+        return True
+    return False
+
+
+def _file_directives(module: Module) -> list:
+    """All `# repro: ignore-file[...]` directives in the file (None = all codes)."""
+    out = []
+    for line in module.lines:
+        m = _SUPPRESS_RE.search(line)
+        if m and m.group("file"):
+            codes = m.group("codes")
+            out.append(None if codes is None else {c.strip() for c in codes.split(",")})
+    return out
+
+
+def run_checkers(modules: list, select: Optional[Iterable] = None) -> list:
+    """Run every (selected) checker over parsed modules; returns findings
+    with suppression comments already applied, sorted by position."""
+    selected = None if select is None else set(select)
+    by_path = {m.path: m for m in modules}
+    findings: list = []
+
+    def reporter(checker):
+        def report(path, line, col, message, anchor=""):
+            findings.append(
+                Finding(
+                    code=checker.code,
+                    path=path,
+                    line=int(line),
+                    col=int(col),
+                    message=message,
+                    severity=checker.severity,
+                    anchor=anchor,
+                )
+            )
+
+        return report
+
+    for checker in all_checkers():
+        if selected is not None and checker.code not in selected:
+            continue
+        report = reporter(checker)
+        if checker.scope == "project":
+            checker.check_project(modules, report)
+        else:
+            for module in modules:
+                checker.check_module(module, report)
+
+    directives = {m.path: _file_directives(m) for m in modules}
+    kept = [
+        f
+        for f in findings
+        if f.path not in by_path or not _suppressed(by_path[f.path], f, directives[f.path])
+    ]
+    kept.sort(key=lambda f: (f.path, f.line, f.col, f.code))
+    # A checker may legitimately hit the same position twice via different
+    # traversal routes; report each (pos, code, message) once.
+    seen, unique = set(), []
+    for f in kept:
+        key = (f.path, f.line, f.col, f.code, f.message)
+        if key not in seen:
+            seen.add(key)
+            unique.append(f)
+    return unique
+
+
+def collect_files(paths: Iterable, root: Optional[Path] = None) -> list:
+    """Expand files/directories into a sorted .py file list."""
+    out = []
+    for p in paths:
+        p = Path(p)
+        if not p.is_absolute() and root is not None:
+            p = root / p
+        if p.is_dir():
+            out.extend(sorted(p.rglob("*.py")))
+        elif p.suffix == ".py":
+            out.append(p)
+    seen, files = set(), []
+    for f in out:
+        r = f.resolve()
+        if r not in seen:
+            seen.add(r)
+            files.append(f)
+    return files
+
+
+def load_modules(files: Iterable, rel_root: Optional[Path] = None) -> list:
+    modules = []
+    for f in files:
+        f = Path(f)
+        rel = f
+        if rel_root is not None:
+            try:
+                rel = f.resolve().relative_to(Path(rel_root).resolve())
+            except ValueError:
+                rel = f
+        modules.append(Module.from_source(str(rel), f.read_text()))
+    return modules
+
+
+def analyze_sources(sources: dict, select: Optional[Iterable] = None) -> list:
+    """Analyze in-memory sources: {relpath: code} -> findings (test seam)."""
+    return run_checkers([Module.from_source(p, s) for p, s in sources.items()], select)
+
+
+def analyze_paths(
+    paths: Iterable,
+    *,
+    root: Optional[Path] = None,
+    select: Optional[Iterable] = None,
+) -> list:
+    files = collect_files(paths, root=root)
+    return run_checkers(load_modules(files, rel_root=root), select)
+
+
+# ------------------------------------------------------------------ baseline
+
+
+def load_baseline(path) -> set:
+    """Fingerprint set from a committed baseline file (empty set if absent)."""
+    p = Path(path)
+    if not p.exists():
+        return set()
+    data = json.loads(p.read_text() or "{}")
+    return set(data.get("findings", []))
+
+
+def apply_baseline(findings: list, baseline: set) -> list:
+    return [f for f in findings if f.fingerprint not in baseline]
+
+
+def write_baseline(findings: list, path) -> None:
+    Path(path).write_text(
+        json.dumps({"findings": sorted(f.fingerprint for f in findings)}, indent=2) + "\n"
+    )

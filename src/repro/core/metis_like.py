@@ -64,7 +64,6 @@ def _propose_match(eu, ev, ew, V, rng, rounds: int = 4):
         b = propose[a]
         match[a], match[b] = b, a
         matched[a] = matched[b] = True
-    cmap = np.full(V, -1, np.int64)
     rep = np.minimum(np.arange(V), match)  # representative = smaller id
     uniq, cmap_all = np.unique(rep, return_inverse=True)
     return cmap_all.astype(np.int64), uniq.shape[0]

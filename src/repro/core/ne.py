@@ -75,7 +75,6 @@ def ne_partition(graph: Graph, num_parts: int, *, seed: int = 0) -> PartitionRes
                     break
             if x < 0:
                 # Fresh random seed vertex with unassigned edges.
-                cand = rng.integers(0, V)
                 scan = np.flatnonzero(unassigned_deg > 0)
                 if scan.size == 0:
                     break

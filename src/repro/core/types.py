@@ -12,7 +12,6 @@ import dataclasses
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 

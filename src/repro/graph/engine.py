@@ -597,25 +597,32 @@ def _superstep(
     return out, msgs_fwd + msgs_bwd, iters, delta
 
 
-def check_int32_kernel_labels(prog: VertexProgram, sub: SubgraphSet, compute_backend: str) -> None:
+def check_int32_kernel_gid(prog: VertexProgram, gid: jax.Array, compute_backend: str) -> None:
     """Refuse kernel backends for int32 programs with values >= 2^24.
 
     The kernel path runs the int32 semiring in f32, which is only exact for
     magnitudes below 2^24 — larger values would merge distinct CC/REACH
     labels (or BFS hop counts) silently. `max(gid)` bounds every int32
     program's finite values: CC/REACH propagate the labels themselves, and
-    BFS hop counts are below the covered-vertex count <= max(gid)+1. Both
-    the sim and distributed drivers call this before launching.
+    BFS hop counts are below the covered-vertex count <= max(gid)+1. All
+    three drivers — sim (`run_bsp`), batched (`run_bsp_batch` /
+    `compile_batch_executable`), and the distributed stepper — call this
+    before any f32 remap happens.
     """
     check_compute_backend(compute_backend)
     if compute_backend != "xla" and prog.dtype == "int32":
-        max_label = int(jnp.max(sub.gid))
+        max_label = int(jnp.max(gid))
         if max_label >= 1 << 24:
             raise ValueError(
                 f"compute_backend={compute_backend!r} runs int32 {prog.name} in f32, "
                 f"exact only for vertex ids < 2^24; graph has id {max_label} — "
                 "use compute_backend='xla'"
             )
+
+
+def check_int32_kernel_labels(prog: VertexProgram, sub: SubgraphSet, compute_backend: str) -> None:
+    """`check_int32_kernel_gid` over a SubgraphSet's global-id table."""
+    check_int32_kernel_gid(prog, sub.gid, compute_backend)
 
 
 # ------------------------------------------------------------ entry points
@@ -1166,11 +1173,20 @@ def make_distributed_stepper(
         in_specs=in_specs,
         out_specs=(spec2, P(axis_tuple), P(), P(None, axis_tuple), P(None, axis_tuple)),
     )
-    if not negate:
-        return sharded
 
-    def negated(arrays: dict, val: jax.Array):
+    def runner(arrays: dict, val: jax.Array):
+        # Same 2^24 exactness guard as run_bsp/_resolve_batch_args: a
+        # too-large id must raise BEFORE any int->f32 remap. Under jit/AOT
+        # tracing gid is abstract and the guard cannot run here — those
+        # paths (GraphPipeline._run_distributed / lower) pre-check the
+        # concrete SubgraphSet before tracing.
+        try:
+            check_int32_kernel_gid(prog, arrays["gid"], compute_backend)
+        except jax.errors.JAXTypeError:
+            pass
+        if not negate:
+            return sharded(arrays, val)
         out, msgs, steps, msgs_b, iters_b = sharded(arrays, -val)
         return -out, msgs, steps, msgs_b, iters_b
 
-    return negated
+    return runner

@@ -14,8 +14,6 @@ have to know the kernels' grid granularity.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

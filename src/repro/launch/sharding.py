@@ -15,11 +15,8 @@ A dim is only assigned a mesh axis when its size divides the axis size —
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models.config import ModelConfig

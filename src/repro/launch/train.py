@@ -12,7 +12,6 @@ async checkpoint I/O overlap, bf16 gradient compression flag.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax

@@ -1,0 +1,510 @@
+"""repro.analysis checker suite: every checker must flag its seeded
+violation fixture and pass the clean twin; suppression comments and the
+baseline must filter findings; and the repo itself must analyze clean
+(the CI gate's contract)."""
+import json
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (
+    analyze_paths,
+    analyze_sources,
+    apply_baseline,
+    load_baseline,
+    write_baseline,
+)
+from repro.analysis.cli import main as cli_main
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def run(source, select=None, path="src/repro/mod.py", extra=None):
+    sources = {path: textwrap.dedent(source)}
+    for p, s in (extra or {}).items():
+        sources[p] = textwrap.dedent(s)
+    return analyze_sources(sources, select=select)
+
+
+def codes(findings):
+    return [f.code for f in findings]
+
+
+# ------------------------------------------------------------------- HS01
+
+
+JIT_SYNC_BAD = """
+    import jax
+    import numpy as np
+
+    @jax.jit
+    def step(x):
+        return np.asarray(x) + 1
+"""
+
+LOOP_SYNC_BAD = """
+    import jax
+    from jax import lax
+
+    def drive(v):
+        def body(c):
+            return c + c.item()
+        return lax.while_loop(lambda c: c.sum() < 3, body, v)
+"""
+
+SYNC_CLEAN = """
+    import jax
+    import numpy as np
+
+    @jax.jit
+    def step(x):
+        return x + 1
+
+    def host_side(x):
+        return np.asarray(step(x))
+"""
+
+CAST_STATIC_CLEAN = """
+    import functools
+    import jax
+
+    @functools.partial(jax.jit, static_argnames=("n",))
+    def step(x, n):
+        return x * float(n) + float(x.shape[0])
+"""
+
+
+def test_hs01_flags_np_asarray_in_jit():
+    fs = run(JIT_SYNC_BAD, select=["HS01"])
+    assert codes(fs) == ["HS01"]
+    assert "np.asarray" in fs[0].message or "numpy" in fs[0].message
+
+
+def test_hs01_flags_item_in_while_loop_body():
+    assert codes(run(LOOP_SYNC_BAD, select=["HS01"])) == ["HS01"]
+
+
+def test_hs01_clean_twin_passes():
+    assert run(SYNC_CLEAN, select=["HS01"]) == []
+    assert run(CAST_STATIC_CLEAN, select=["HS01"]) == []
+
+
+# ------------------------------------------------------------------- XD01
+
+
+XD_PRELUDE = """
+    import jax.numpy as jnp
+
+    INF_I32 = jnp.int32(2**31 - 1)
+    INF_F32 = jnp.float32(3.0e38)
+
+    def _remap(val):
+        return jnp.where(val == INF_I32, INF_F32, val.astype(jnp.float32))
+
+    def _check_ids(val):
+        if int(val.max()) >= 1 << 24:
+            raise ValueError("ids exceed the f32-exact domain")
+"""
+
+XD_BAD_DIRECT = XD_PRELUDE + """
+    def run_kernel(val):
+        return _remap(val)
+"""
+
+XD_BAD_CLOSURE = XD_PRELUDE + """
+    def make_stepper(statics):
+        def stepper(v):
+            return _remap(v)
+        return stepper
+"""
+
+XD_CLEAN_GUARDED = XD_PRELUDE + """
+    def run_kernel(val):
+        _check_ids(val)
+        return _remap(val)
+
+    def make_stepper(statics):
+        def stepper(v):
+            return _remap(v)
+        def runner(v):
+            _check_ids(v)
+            return stepper(v)
+        return runner
+"""
+
+
+def test_xd01_flags_unguarded_entry():
+    fs = run(XD_BAD_DIRECT, select=["XD01"])
+    assert codes(fs) == ["XD01"]
+    assert fs[0].anchor == "run_kernel"
+
+
+def test_xd01_flags_unguarded_closure():
+    fs = run(XD_BAD_CLOSURE, select=["XD01"])
+    assert codes(fs) == ["XD01"]
+    assert fs[0].anchor == "make_stepper"
+
+
+def test_xd01_guarded_twin_passes():
+    assert run(XD_CLEAN_GUARDED, select=["XD01"]) == []
+
+
+def test_xd01_would_have_caught_the_old_distributed_stepper():
+    """The pre-fix engine (no guard in make_distributed_stepper) is the
+    checker's raison d'etre: rebuilding that shape must flag."""
+    engine = (REPO_ROOT / "src/repro/graph/engine.py").read_text()
+    assert analyze_sources({"src/repro/graph/engine.py": engine}, select=["XD01"]) == []
+    broken = engine.replace("check_int32_kernel_gid(prog, arrays[\"gid\"], compute_backend)", "pass")
+    fs = analyze_sources({"src/repro/graph/engine.py": broken}, select=["XD01"])
+    assert codes(fs) == ["XD01"]
+    assert fs[0].anchor == "make_distributed_stepper"
+
+
+# ------------------------------------------------------------------- KP01
+
+
+KP_REF_STUB = """
+    def thing_ref(x, scale):
+        return x * scale
+"""
+
+KP_CLEAN = """
+    from repro.kernels import ref
+    from repro.kernels.thing import thing_pallas
+
+    def _resolve_impl(impl, interpret):
+        return impl or "ref", bool(interpret)
+
+    def thing(x, scale, *, impl=None, block_e=128, interpret=None):
+        impl, interpret = _resolve_impl(impl, interpret)
+        if impl == "ref":
+            return ref.thing_ref(x, scale)
+        pad = (-x.shape[0]) % block_e
+        return thing_pallas(x, scale, block_e=block_e, interpret=interpret)
+"""
+
+KP_NO_PALLAS = """
+    from repro.kernels import ref
+
+    def _resolve_impl(impl, interpret):
+        return impl or "ref", bool(interpret)
+
+    def thing(x, scale, *, impl=None, interpret=None):
+        impl, interpret = _resolve_impl(impl, interpret)
+        return ref.thing_ref(x, scale)
+"""
+
+KP_DRIFTED_REF = """
+    from repro.kernels import ref
+    from repro.kernels.thing import thing_pallas
+
+    def _resolve_impl(impl, interpret):
+        return impl or "ref", bool(interpret)
+
+    def thing(x, *, impl=None, interpret=None):
+        impl, interpret = _resolve_impl(impl, interpret)
+        if impl == "ref":
+            return ref.thing_ref(x)
+        return thing_pallas(x, interpret=interpret)
+"""
+
+KP_NO_INTERPRET = """
+    from repro.kernels.thing import thing_pallas
+    from repro.kernels import ref
+
+    def _resolve_impl(impl, interpret):
+        return impl or "ref", bool(interpret)
+
+    def thing(x, *, impl=None, interpret=None):
+        impl, interpret = _resolve_impl(impl, interpret)
+        if impl == "ref":
+            return ref.thing_ref(x, 1.0)
+        return thing_pallas(x)
+"""
+
+KP_NO_PADDING = """
+    from repro.kernels import ref
+    from repro.kernels.thing import thing_pallas
+
+    def _resolve_impl(impl, interpret):
+        return impl or "ref", bool(interpret)
+
+    def thing(x, *, impl=None, block_e=128, interpret=None):
+        impl, interpret = _resolve_impl(impl, interpret)
+        if impl == "ref":
+            return ref.thing_ref(x, 1.0)
+        return thing_pallas(x, interpret=interpret)
+"""
+
+KP_EXTRA = {"src/repro/kernels/ref.py": KP_REF_STUB}
+
+
+def test_kp01_clean_pair_passes():
+    assert run(KP_CLEAN, select=["KP01"], path="src/repro/kernels/ops.py", extra=KP_EXTRA) == []
+
+
+def test_kp01_flags_missing_pallas_branch():
+    fs = run(KP_NO_PALLAS, select=["KP01"], path="src/repro/kernels/ops.py", extra=KP_EXTRA)
+    assert codes(fs) == ["KP01"] and "pallas" in fs[0].message
+
+
+def test_kp01_flags_ref_signature_drift():
+    fs = run(KP_DRIFTED_REF, select=["KP01"], path="src/repro/kernels/ops.py", extra=KP_EXTRA)
+    assert codes(fs) == ["KP01"] and "scale" in fs[0].message
+
+
+def test_kp01_flags_missing_interpret_forwarding():
+    fs = run(KP_NO_INTERPRET, select=["KP01"], path="src/repro/kernels/ops.py", extra=KP_EXTRA)
+    assert codes(fs) == ["KP01"] and "interpret" in fs[0].message
+
+
+def test_kp01_flags_unpadded_block_param():
+    fs = run(KP_NO_PADDING, select=["KP01"], path="src/repro/kernels/ops.py", extra=KP_EXTRA)
+    assert codes(fs) == ["KP01"] and "block_e" in fs[0].message
+
+
+# ------------------------------------------------------------- RC01 / RC02
+
+
+RC_PARTITIONER_BAD = """
+    from repro.api.registry import register_partitioner
+
+    @register_partitioner("demo", compute_backends=("xla", "ref", "pallas"))
+    def demo_partition(graph, p):
+        return None
+
+    @register_partitioner("demo2", chunked=True)
+    def demo2_partition(graph, p):
+        return None
+"""
+
+RC_PARTITIONER_CLEAN = """
+    from repro.api.registry import register_partitioner
+
+    @register_partitioner("demo", compute_backends=("xla", "ref", "pallas"), chunked=True)
+    def demo_partition(graph, p, *, block=64, compute_backend="xla"):
+        return None
+"""
+
+RC_PROGRAM_BAD = """
+    from repro.graph.engine import VertexProgram, register_program
+
+    SUMFIX = register_program(VertexProgram(name="sumfix", dtype="int32", combine="sum"))
+    TYPO = register_program(VertexProgram(name="typo", dtype="int16"))
+    DUP = register_program(VertexProgram(name="sumfix", dtype="int32"))
+"""
+
+RC_PROGRAM_CLEAN = """
+    from repro.graph.engine import VertexProgram, register_program
+
+    OK = register_program(VertexProgram(
+        name="ok", dtype="float32", combine="sum", local="sweep", apply="pagerank",
+    ))
+"""
+
+RC02_BAD = """
+    import dataclasses
+
+    @dataclasses.dataclass(frozen=True)
+    class Config:
+        blocks: list = []
+
+        def __post_init__(self):
+            object.__setattr__(self, "blocks", list(self.blocks))
+"""
+
+RC02_CLEAN = """
+    import dataclasses
+
+    @dataclasses.dataclass(frozen=True)
+    class Config:
+        blocks: tuple = ()
+
+        def __post_init__(self):
+            if not all(b > 0 for b in self.blocks):
+                raise ValueError("blocks must be positive")
+"""
+
+
+def test_rc01_flags_capability_mismatches():
+    fs = run(RC_PARTITIONER_BAD, select=["RC01"])
+    assert codes(fs) == ["RC01", "RC01"]
+    assert "compute_backend" in fs[0].message and "block" in fs[1].message
+
+
+def test_rc01_partitioner_clean_twin_passes():
+    assert run(RC_PARTITIONER_CLEAN, select=["RC01"]) == []
+
+
+def test_rc01_flags_program_field_violations():
+    msgs = " | ".join(f.message for f in run(RC_PROGRAM_BAD, select=["RC01"]))
+    assert "combine='sum' requires local='sweep'" in msgs
+    assert "int16" in msgs
+    assert "already registered" in msgs
+
+
+def test_rc01_program_clean_twin_passes():
+    assert run(RC_PROGRAM_CLEAN, select=["RC01"]) == []
+
+
+def test_rc02_flags_mutable_default_and_setattr():
+    fs = run(RC02_BAD, select=["RC02"])
+    assert codes(fs) == ["RC02", "RC02"]
+
+
+def test_rc02_clean_twin_passes():
+    assert run(RC02_CLEAN, select=["RC02"]) == []
+
+
+# ------------------------------------------------------------------- DA01
+
+
+DA_BAD = """
+    import jax
+
+    def _step(x, y):
+        return x + y
+
+    step = jax.jit(_step, donate_argnums=(0,))
+
+    def drive(x, y):
+        out = step(x, y)
+        return out + x
+"""
+
+DA_CLEAN = """
+    import functools
+
+    import jax
+
+    @functools.partial(jax.jit, donate_argnums=(1,))
+    def _fused(sub, val):
+        return val + 1
+
+    def drive(sub, val):
+        val = _fused(sub, val)
+        return val
+"""
+
+
+def test_da01_flags_read_after_donation():
+    fs = run(DA_BAD, select=["DA01"])
+    assert codes(fs) == ["DA01"]
+    assert "`x` was donated" in fs[0].message
+
+
+def test_da01_rebinding_carry_passes():
+    assert run(DA_CLEAN, select=["DA01"]) == []
+
+
+# ----------------------------------------------------------------- hygiene
+
+
+def test_ui01_flags_unused_import_and_honors_noqa():
+    bad = """
+        import os
+        import sys
+
+        print(sys.argv)
+    """
+    fs = run(bad, select=["UI01"])
+    assert codes(fs) == ["UI01"] and fs[0].anchor == "os"
+    assert run(bad.replace("import os", "import os  # noqa"), select=["UI01"]) == []
+
+
+def test_ds01_flags_dead_store():
+    bad = """
+        def f(x):
+            unused = x * 2
+            return x
+    """
+    fs = run(bad, select=["DS01"])
+    assert codes(fs) == ["DS01"]
+    assert run(bad.replace("return x", "return unused"), select=["DS01"]) == []
+
+
+def test_md01_flags_mutable_default():
+    assert codes(run("def f(x, acc=[]):\n    return acc\n", select=["MD01"])) == ["MD01"]
+    assert run("def f(x, acc=()):\n    return acc\n", select=["MD01"]) == []
+
+
+# -------------------------------------------------- suppressions, baseline
+
+
+def test_line_suppression_by_code():
+    src = JIT_SYNC_BAD.replace(
+        "return np.asarray(x) + 1", "return np.asarray(x) + 1  # repro: ignore[HS01]"
+    )
+    assert run(src, select=["HS01"]) == []
+    wrong = JIT_SYNC_BAD.replace(
+        "return np.asarray(x) + 1", "return np.asarray(x) + 1  # repro: ignore[XD01]"
+    )
+    assert codes(run(wrong, select=["HS01"])) == ["HS01"]
+
+
+def test_bare_line_suppression_covers_all_codes():
+    src = JIT_SYNC_BAD.replace(
+        "return np.asarray(x) + 1", "return np.asarray(x) + 1  # repro: ignore"
+    )
+    assert run(src, select=["HS01"]) == []
+
+
+def test_file_suppression():
+    src = "# repro: ignore-file[HS01]\n" + textwrap.dedent(JIT_SYNC_BAD)
+    assert analyze_sources({"src/repro/mod.py": src}, select=["HS01"]) == []
+
+
+def test_baseline_roundtrip(tmp_path):
+    fs = run(JIT_SYNC_BAD, select=["HS01"])
+    assert fs
+    path = tmp_path / "baseline.json"
+    write_baseline(fs, path)
+    baseline = load_baseline(path)
+    assert apply_baseline(fs, baseline) == []
+    assert load_baseline(tmp_path / "missing.json") == set()
+
+
+def test_fingerprint_is_line_number_free():
+    fs1 = run(JIT_SYNC_BAD, select=["HS01"])
+    fs2 = run("\n\n" + textwrap.dedent(JIT_SYNC_BAD), select=["HS01"])
+    assert fs1[0].line != fs2[0].line
+    assert fs1[0].fingerprint == fs2[0].fingerprint
+
+
+# ---------------------------------------------------------------- CLI gate
+
+
+def test_cli_fail_on_findings_exit_codes(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text("import jax\n\n@jax.jit\ndef f(x):\n    return float(x)\n")
+    assert cli_main([str(bad), "--fail-on-findings", "--baseline", str(tmp_path / "b.json")]) == 1
+    report = tmp_path / "report.json"
+    assert cli_main([str(bad), "--json", str(report), "--baseline", str(tmp_path / "b.json")]) == 0
+    payload = json.loads(report.read_text())
+    assert [f["code"] for f in payload["findings"]] == ["HS01"]
+    clean = tmp_path / "clean.py"
+    clean.write_text("def f(x):\n    return x\n")
+    assert cli_main([str(clean), "--fail-on-findings"]) == 0
+    capsys.readouterr()
+
+
+def test_cli_baseline_accepts_known_findings(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text("import jax\n\n@jax.jit\ndef f(x):\n    return float(x)\n")
+    baseline = tmp_path / "baseline.json"
+    assert cli_main([str(bad), "--baseline", str(baseline), "--write-baseline"]) == 0
+    assert cli_main([str(bad), "--baseline", str(baseline), "--fail-on-findings"]) == 0
+    capsys.readouterr()
+
+
+# ------------------------------------------------------------ repo is clean
+
+
+def test_repo_analyzes_clean_with_empty_baseline():
+    """The CI gate's contract: the committed baseline is EMPTY and the
+    whole package still analyzes clean — findings get fixed, not filed."""
+    baseline_path = REPO_ROOT / "analysis_baseline.json"
+    assert load_baseline(baseline_path) == set()
+    findings = analyze_paths([REPO_ROOT / "src" / "repro"], root=REPO_ROOT)
+    assert findings == [], "\n".join(f.render() for f in findings)

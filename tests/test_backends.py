@@ -182,6 +182,59 @@ def test_cc_kernel_backend_rejects_huge_vertex_ids(built_small):
     alg.connected_components(big, compute_backend="xla", max_supersteps=2)
 
 
+def test_batch_kernel_backend_rejects_huge_vertex_ids(built_small):
+    """The same 2^24 guard must fire on the batched driver and the AOT
+    compile path BEFORE any f32 remap (or any lowering work) happens."""
+    import dataclasses
+
+    from repro.graph.engine import compile_batch_executable, run_bsp_batch
+
+    _, sub, _ = built_small
+    big = dataclasses.replace(sub, gid=jnp.where(sub.vmask, sub.gid + (1 << 24), sub.gid))
+    with pytest.raises(ValueError, match="vertex ids"):
+        run_bsp_batch(big, "cc", batch=2, compute_backend="ref")
+    with pytest.raises(ValueError, match="vertex ids"):
+        compile_batch_executable(big, "cc", 2, compute_backend="ref")
+    # xla batch keeps full int32 precision
+    run_bsp_batch(big, "cc", batch=2, compute_backend="xla", max_supersteps=2)
+
+
+def test_distributed_stepper_rejects_huge_vertex_ids(small_powerlaw):
+    """Eagerly calling the distributed stepper with a kernel backend and
+    ids >= 2^24 must raise the named ValueError before the shard_map runs;
+    under jit tracing the guard defers to the pipeline's concrete
+    pre-check instead of breaking the trace."""
+    import dataclasses
+
+    from repro.core import PARTITIONERS
+    from repro.graph.build import build_subgraphs
+    from repro.graph.engine import (
+        CC,
+        init_cc,
+        make_distributed_stepper,
+        subgraphs_to_arrays,
+    )
+    from repro.launch.mesh import make_mesh_compat
+
+    res = PARTITIONERS["ebg"](small_powerlaw, 1)
+    sub = build_subgraphs(small_powerlaw, res, symmetrize=True)
+    big = dataclasses.replace(sub, gid=jnp.where(sub.vmask, sub.gid + (1 << 24), sub.gid))
+    mesh = make_mesh_compat((1,), ("workers",))
+    arrays, statics = subgraphs_to_arrays(big)
+    stepper = make_distributed_stepper(
+        mesh, "workers", CC, statics, num_supersteps=4, inner_cap=100,
+        compute_backend="ref",
+    )
+    with pytest.raises(ValueError, match="vertex ids"):
+        stepper(arrays, init_cc(big))
+    # the guard is backend-scoped: xla runs huge ids at full precision
+    stepper_x = make_distributed_stepper(
+        mesh, "workers", CC, statics, num_supersteps=2, inner_cap=8
+    )
+    val, _, steps, _, _ = stepper_x(arrays, init_cc(big))
+    assert int(steps) == 2 and val.shape == init_cc(big).shape
+
+
 def test_pipeline_surfaces_compute_backend(small_powerlaw):
     from repro.api import GraphPipeline
 
