@@ -10,11 +10,15 @@ all through the one generic `VertexProgram` driver) the host- vs
 fused-driver wall, supersteps/s, dispatch counts, and message stats, plus
 a distributed-PageRank section (sim-vs-dist value match, messages,
 supersteps) run on a forced 8-device host mesh in a subprocess, and a
-serving section (schema 4): batched-vs-sequential throughput at B=8
+serving section: batched-vs-sequential throughput at B=8
 through the new `repro.serve` tier (asserted >= 2x), plus a synthetic
 power-law trace replayed through the `GraphQueryServer` admission queue
 (p50/p99 queue latency, padding waste, executable-cache hit rate; the
-cache is asserted to compile at most once per (program, bucket)).
+cache is asserted to compile at most once per (program, bucket)), and a
+resilience section (schema 5): crash/resume bit-parity
+(`resume_matches_uninterrupted` asserted) plus a chaos serving trace with
+injected transient faults (retry/shed counters; every query asserted to
+terminate answered-or-named-failure).
 
 Two speedup figures per engine program:
   - wall_speedup: measured host/fused wall ratio. On a CPU host, dispatch
@@ -166,6 +170,82 @@ def _serving_section(repeats: int) -> dict:
     }
 
 
+def _resilience_section() -> dict:
+    """Chaos smoke (schema 5): the fault-tolerance claims held in CI.
+
+    1. Crash/resume bit-parity: run CC with checkpointing and a seeded
+       worker crash, resume from the checkpoint directory, and assert
+       values AND BSPStats are bit-identical to the uninterrupted run
+       (`resume_matches_uninterrupted`).
+    2. Chaos serving: a short trace through `run_graph_serve` with
+       injected transient faults and stragglers — every query must
+       terminate (answered within the retry budget or failed with a
+       named reason), zero unhandled exceptions.
+    """
+    import shutil
+    import tempfile
+
+    from repro.launch.graph_serve import run_graph_serve
+    from repro.resilience import FaultPlan, WorkerCrashError, resume_bsp
+
+    graph = rmat(1 << 12, 40_000, seed=13, a=0.65, b=0.15, c=0.15)
+    pipe = GraphPipeline(graph).partition("ebg_chunked", parts=8)
+    base = pipe.run("cc")
+    crash_step = max(1, base.stats.supersteps // 2)
+    ckpt_dir = tempfile.mkdtemp(prefix="bench_resilience_")
+    try:
+        t0 = time.perf_counter()
+        try:
+            pipe.run(
+                "cc", checkpoint_every=1, ckpt_dir=ckpt_dir,
+                fault_plan=FaultPlan(seed=5, crash_at_superstep=crash_step),
+            )
+            crashed = False
+        except WorkerCrashError:
+            crashed = True
+        # CC builds the symmetrized subgraphs; resume against the SAME build
+        # (the resume metadata fingerprints the SubgraphSet dims).
+        vals, stats = resume_bsp(base.subgraphs, ckpt_dir=ckpt_dir)
+        resume_wall = time.perf_counter() - t0
+        matches = (
+            bool(np.array_equal(np.asarray(vals)[:, :-1], base.values))
+            and stats.supersteps == base.stats.supersteps
+            and np.array_equal(stats.messages_per_step_worker,
+                               base.stats.messages_per_step_worker)
+            and np.array_equal(stats.inner_iters_per_step, base.stats.inner_iters_per_step)
+        )
+    finally:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+    chaos = run_graph_serve(
+        num_vertices=1 << 11, num_edges=16_000, parts=4, queries=48,
+        rate_qps=4000.0, max_batch=8, seed=3,
+        fault_seed=11, transient_prob=0.2, straggler_prob=0.15,
+        straggler_delay_s=0.005, max_retries=4,
+    )
+    res = chaos["resilience"]
+    assert res["terminated"] == 48, res  # every query accounted for
+    assert res["answered"] + res["failed"] == 48, res
+    # seed=11 is chosen so the deterministic draws actually fire: the
+    # trace must exercise the retry path, not just pass fault-free.
+    assert res["faults_injected"] > 0 and res["retries"] > 0, res
+    return {
+        "crash_resume": {
+            "program": "cc",
+            "crash_at_superstep": crash_step,
+            "crashed": crashed,
+            "resume_matches_uninterrupted": matches,
+            "wall_s": round(resume_wall, 4),
+        },
+        "chaos_serving": {
+            "queries": 48,
+            "transient_prob": 0.2,
+            "straggler_prob": 0.15,
+            **res,
+        },
+    }
+
+
 def main(repeats: int = 3, out_path: Path = OUT) -> dict:
     # twitter_like family at smoke scale: heavy-tailed rmat, p=32 workers.
     graph = rmat(1 << 14, 200_000, seed=7, a=0.65, b=0.15, c=0.15)
@@ -212,9 +292,10 @@ def main(repeats: int = 3, out_path: Path = OUT) -> dict:
 
     dist_pr = _dist_pagerank_section()
     serving = _serving_section(repeats)
+    resilience = _resilience_section()
 
     data = {
-        "schema": 4,
+        "schema": 5,
         "graph": {"family": "twitter_like_smoke", "num_vertices": graph.num_vertices,
                   "num_edges": graph.num_edges, "p": P},
         "partition": {"partitioner": "ebg_chunked", "wall_s": round(partition_s, 3)},
@@ -235,6 +316,7 @@ def main(repeats: int = 3, out_path: Path = OUT) -> dict:
         },
         "dist": {"pr": dist_pr},
         "serving": serving,
+        "resilience": resilience,
     }
     # The structural claims CI holds the line on: the fused driver turns
     # one-dispatch-per-superstep into one dispatch per run, distributed
@@ -247,6 +329,10 @@ def main(repeats: int = 3, out_path: Path = OUT) -> dict:
     assert set(quality) >= {"ebv", "hdrf", "greedy"}, quality
     for row in quality.values():
         assert row["replication_factor"] >= 1.0 and row["edge_imbalance"] >= 1.0, row
+    # Fault-tolerance claims (schema 5): crash + resume is bit-identical
+    # to the uninterrupted run, and the chaos trace lost nothing.
+    assert resilience["crash_resume"]["crashed"], resilience["crash_resume"]
+    assert resilience["crash_resume"]["resume_matches_uninterrupted"], resilience["crash_resume"]
 
     out_path.write_text(json.dumps(data, indent=2) + "\n")
     e = data["engine"]["total"]
@@ -260,7 +346,9 @@ def main(repeats: int = 3, out_path: Path = OUT) -> dict:
         f"{e['dispatch_reduction']}x fewer dispatches) | dist pr msgs "
         f"{dist_pr.get('messages_total')} | serve B=8 "
         f"{serving['batch']['throughput_speedup']}x, cache hit "
-        f"{serving['trace']['cache']['hit_rate']} -> {out_path.name}"
+        f"{serving['trace']['cache']['hit_rate']} | resume parity "
+        f"{resilience['crash_resume']['resume_matches_uninterrupted']}, chaos retries "
+        f"{resilience['chaos_serving']['retries']} -> {out_path.name}"
     )
     return data
 

@@ -19,24 +19,33 @@ fi
 python -m pytest -x -q "$@"
 if [ "$#" -gt 0 ]; then
   # Extra args may have filtered out the backend-parity, VertexProgram,
-  # streaming-scorer, and serving suites (xla vs ref vs pallas-interpret
-  # engine, chunked bitset + EdgeScorer scan/chunked/oracle parity,
-  # BFS/reach oracles, distributed PageRank, batched-BSP/server parity) —
-  # always run them, so an engine, partitioner, or serving regression
-  # fails loudly in every invocation mode. The no-arg run above already
-  # includes them.
-  python -m pytest -q tests/test_backends.py tests/test_programs.py tests/test_streaming.py tests/test_serve.py
+  # streaming-scorer, serving, and resilience suites (xla vs ref vs
+  # pallas-interpret engine, chunked bitset + EdgeScorer
+  # scan/chunked/oracle parity, BFS/reach oracles, distributed PageRank,
+  # batched-BSP/server parity, crash/resume bit-parity + chaos serving) —
+  # always run them, so an engine, partitioner, serving, or
+  # fault-tolerance regression fails loudly in every invocation mode.
+  # The no-arg run above already includes them.
+  python -m pytest -q tests/test_backends.py tests/test_programs.py tests/test_streaming.py tests/test_serve.py tests/test_resilience.py
 else
   # Benchmark smoke: partition -> build -> engine at p=32, emitting
   # BENCH_pipeline.json (partition/build walls, Table-III quality row per
   # streaming EdgeScorer, per-program supersteps/s and messages for every
   # registered VertexProgram, host-vs-fused driver comparison,
-  # distributed-PageRank section, and the schema-4 serving section:
-  # batched-vs-sequential throughput + trace replay through the
-  # GraphQueryServer) so the perf trajectory is tracked.
+  # distributed-PageRank section, the serving section: batched-vs-
+  # sequential throughput + trace replay through the GraphQueryServer,
+  # and the schema-5 resilience section: crash/resume bit-parity with
+  # resume_matches_uninterrupted asserted + a chaos serving trace with
+  # retry/shed counters) so the perf trajectory is tracked.
   python -m benchmarks.pipeline_smoke
 fi
 # Serving smoke trace: a tiny end-to-end replay through the admission
 # queue + executable cache, in BOTH invocation modes — a broken server
 # loop fails CI even when pytest args filter the serving suite out.
 python -m repro.launch.graph_serve --vertices 1024 --edges 8000 --parts 4 --queries 32 --rate 4000
+# Chaos smoke: the same trace with deterministic injected transient
+# faults and stragglers through the retry/backoff path. The driver
+# asserts every query terminates (answered within the retry budget or a
+# named timeout/shed failure) with zero unhandled exceptions.
+python -m repro.launch.graph_serve --vertices 1024 --edges 8000 --parts 4 --queries 32 --rate 4000 \
+  --fault-seed 11 --transient-prob 0.2 --straggler-prob 0.15 --straggler-delay-ms 5 --max-retries 4

@@ -8,6 +8,7 @@ Add a new checker by dropping a module here that defines a
 from repro.analysis.checkers import (  # noqa: F401  (registration side effect)
     donation,
     exactness,
+    exceptions,
     host_sync,
     hygiene,
     kernel_parity,

@@ -15,7 +15,7 @@ Suppression syntax (see docs/api.md "Static analysis"):
     # repro: ignore-file                                 whole file, all codes
 
 ``# noqa`` on a line additionally suppresses the hygiene codes (UI01/DS01/
-MD01) so existing flake8-style pragmas keep working.
+MD01/EH01) so existing flake8-style pragmas keep working.
 """
 from __future__ import annotations
 
@@ -31,7 +31,7 @@ SEVERITIES = ("error", "warning")
 
 _SUPPRESS_RE = re.compile(r"#\s*repro:\s*ignore(?P<file>-file)?(?:\[(?P<codes>[A-Za-z0-9_,\s]+)\])?")
 _NOQA_RE = re.compile(r"#\s*noqa\b")
-_NOQA_CODES = ("UI01", "DS01", "MD01")  # hygiene codes honor plain `# noqa`
+_NOQA_CODES = ("UI01", "DS01", "MD01", "EH01")  # hygiene codes honor plain `# noqa`
 
 
 @dataclasses.dataclass(frozen=True)

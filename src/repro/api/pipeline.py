@@ -327,7 +327,11 @@ class GraphPipeline:
         ("fused" single-dispatch while_loop, the default, or "host" —
         one dispatch per superstep, kept for A/B). Extra kwargs flow to
         the engine (max_supersteps, inner_cap, exchange_period, tol,
-        num_iters — the PageRank alias of max_supersteps — damping, ...).
+        num_iters — the PageRank alias of max_supersteps — damping, ...),
+        including the fault-tolerance knobs (checkpoint_every + ckpt_dir
+        for superstep snapshots resumable via repro.resilience.resume_bsp,
+        and fault_plan for deterministic fault injection — docs/api.md
+        "Fault tolerance").
         """
         prog = _resolve_program(program)
         prog, kw = _translate_engine_kwargs(prog, kw)

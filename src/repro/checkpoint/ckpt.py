@@ -110,19 +110,37 @@ def restore(ckpt_dir: str | Path, step: int, like_tree):
 
 
 class AsyncCheckpointer:
-    """Overlaps checkpoint I/O with the next training step."""
+    """Overlaps checkpoint I/O with the next training step.
+
+    A failure on the writer thread (disk full, bad path, permission)
+    is captured and re-raised on the NEXT `save()` or on `wait()` —
+    a failed checkpoint must never be silently treated as durable, or
+    a later crash would "resume" from a snapshot that does not exist.
+    """
 
     def __init__(self, ckpt_dir: str | Path):
         self.ckpt_dir = Path(ckpt_dir)
         self._thread: threading.Thread | None = None
+        self._exc: BaseException | None = None
+
+    def _save_guarded(self, step: int, tree):
+        try:
+            save(self.ckpt_dir, step, tree)
+        except BaseException as e:  # captured; re-raised on wait()/next save()
+            self._exc = e
 
     def save(self, step: int, tree):
         self.wait()
         host_tree = jax.tree.map(np.asarray, tree)  # snapshot before async
-        self._thread = threading.Thread(target=save, args=(self.ckpt_dir, step, host_tree))
+        self._thread = threading.Thread(target=self._save_guarded, args=(step, host_tree))
         self._thread.start()
 
     def wait(self):
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._exc is not None:
+            exc, self._exc = self._exc, None
+            raise RuntimeError(
+                f"async checkpoint save to {self.ckpt_dir} failed"
+            ) from exc

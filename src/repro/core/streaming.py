@@ -173,6 +173,59 @@ GREEDY = register_scorer(EdgeScorer(
 ))
 
 
+def validate_edge_stream(
+    src: np.ndarray,
+    dst: np.ndarray,
+    *,
+    num_vertices: int,
+    weights: Optional[np.ndarray] = None,
+) -> None:
+    """Validate an edge stream at partitioner intake, following the
+    `Graph.validate` convention: raise ValueError naming the offending
+    FIELD and the first offending ROW (stream position, pre-reorder).
+
+    Checks: matching 1-D shapes, vertex ids in [0, num_vertices),
+    no self-loops (a self-loop contributes a spurious replication miss
+    to every score and the generators strip them — one arriving here is
+    corrupt input, not data), and finite non-negative per-edge weights.
+    """
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    if src.ndim != 1 or src.shape != dst.shape:
+        raise ValueError(
+            f"src/dst must be 1-D and the same shape; got src {src.shape}, dst {dst.shape}"
+        )
+    for name, arr in (("src", src), ("dst", dst)):
+        if not np.issubdtype(arr.dtype, np.integer):
+            raise ValueError(f"{name} must be an integer array, got dtype {arr.dtype}")
+        bad = np.flatnonzero((arr < 0) | (arr >= num_vertices))
+        if bad.size:
+            row = int(bad[0])
+            raise ValueError(
+                f"{name}[{row}] = {int(arr[row])} out of range "
+                f"[0, num_vertices={num_vertices})"
+            )
+    loops = np.flatnonzero(src == dst)
+    if loops.size:
+        row = int(loops[0])
+        raise ValueError(
+            f"self-loop at edge row {row}: src[{row}] == dst[{row}] == {int(src[row])} "
+            "(streaming partitioners require loop-free streams; strip self-loops first)"
+        )
+    if weights is not None:
+        w = np.asarray(weights)
+        if w.shape != src.shape:
+            raise ValueError(
+                f"weights must match the edge stream shape {src.shape}, got {w.shape}"
+            )
+        bad = np.flatnonzero(~np.isfinite(w.astype(np.float64)) | (w.astype(np.float64) < 0))
+        if bad.size:
+            row = int(bad[0])
+            raise ValueError(
+                f"weights[{row}] = {float(w[row])!r} must be finite and >= 0"
+            )
+
+
 def edge_weights_np(
     scorer: EdgeScorer, graph: Graph, src: np.ndarray, dst: np.ndarray
 ) -> Optional[tuple[np.ndarray, np.ndarray]]:
@@ -253,10 +306,13 @@ def streaming_scan_partition(
     ce, cv, eps = sc.coefficients(ce, cv, eps)
     if sort_edges is None:
         sort_edges = sc.sort_edges
-    if order is None and sort_edges:
-        order = degree_sum_order(graph)
     src = np.asarray(graph.src, dtype=np.int32)
     dst = np.asarray(graph.dst, dtype=np.int32)
+    # Validate BEFORE the degree-sum reorder (which itself assumes in-range
+    # ids) so offending rows are named in the caller's input order.
+    validate_edge_stream(src, dst, num_vertices=graph.num_vertices)
+    if order is None and sort_edges:
+        order = degree_sum_order(graph)
     if order is not None:
         src, dst = src[order], dst[order]
     w = edge_weights_np(sc, graph, src, dst)
@@ -402,9 +458,12 @@ def streaming_chunked_partition(
     ce, cv, eps = sc.coefficients(ce, cv, eps)
     if sort_edges is None:
         sort_edges = sc.sort_edges
-    order = degree_sum_order(graph) if sort_edges else None
     src = np.asarray(graph.src, dtype=np.int32)
     dst = np.asarray(graph.dst, dtype=np.int32)
+    # Validate BEFORE reorder and BEFORE the masked self-loop padding below
+    # (pad rows are synthetic and exempt); rows are named in input order.
+    validate_edge_stream(src, dst, num_vertices=graph.num_vertices)
+    order = degree_sum_order(graph) if sort_edges else None
     if order is not None:
         src, dst = src[order], dst[order]
     w = edge_weights_np(sc, graph, src, dst)

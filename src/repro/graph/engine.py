@@ -702,10 +702,15 @@ def _fused_bsp(sub, val, *, prog, max_supersteps, inner_cap, exchange_period, to
         return (v2, last_ex, k + 1, converged, msgs_buf.at[k].set(msgs), iters_buf.at[k].set(iters))
 
     carry = (val, val, jnp.int32(0), jnp.bool_(False), msgs_buf, iters_buf)
-    val, _, steps, _, msgs_buf, iters_buf = jax.lax.while_loop(cond, body, carry)
+    val, _, steps, converged, msgs_buf, iters_buf = jax.lax.while_loop(cond, body, carry)
     # Edge counts ride along so the stats assembly needs no extra dispatch.
+    # The converged flag disambiguates "fixpoint reached on the last step"
+    # from "step budget exhausted" — the checkpointed segment driver in
+    # repro.resilience.bsp needs it to stop instead of launching a phantom
+    # extra segment (which would append a superstep the uninterrupted run
+    # never paid, breaking bit-parity of the stats).
     edges = jnp.sum(sub.edge_mask, axis=1, dtype=jnp.int32)
-    return val, steps, msgs_buf, iters_buf, edges
+    return val, steps, converged, msgs_buf, iters_buf, edges
 
 
 def _assemble_stats(steps: int, msgs_sw: np.ndarray, iters_sw: np.ndarray,
@@ -743,10 +748,23 @@ def run_bsp(
     source=None,
     compute_backend: str = "xla",
     driver: str = "fused",
+    checkpoint_every: Optional[int] = None,
+    ckpt_dir=None,
+    fault_plan=None,
 ) -> tuple[jax.Array, BSPStats]:
     """THE simulation-mode driver: runs any `VertexProgram` (instance or
     registered name). exchange_period>1 = bounded staleness (fixpoint
     programs only).
+
+    Fault tolerance (docs/api.md "Fault tolerance"): `checkpoint_every=k`
+    with `ckpt_dir=` snapshots the value carry + per-step stats buffers
+    every k supersteps through `repro.checkpoint.ckpt`, and `fault_plan=`
+    (a `repro.resilience.FaultPlan`) injects a deterministic worker crash;
+    `repro.resilience.resume_bsp` restores the last checkpoint and
+    continues to a final state bit-identical to an uninterrupted run. Any
+    of the three kwargs routes the run through the segmented driver in
+    `repro.resilience.bsp` (same values and stats, pinned by
+    tests/test_resilience.py).
 
     init_val defaults to the program's own `init_fn` (pass `source=` /
     `num_vertices=` as the program needs). max_supersteps=None takes the
@@ -766,6 +784,17 @@ def run_bsp(
     run (as repro.graph.algorithms does) rather than reusing one across
     calls.
     """
+    if checkpoint_every is not None or ckpt_dir is not None or fault_plan is not None:
+        # Deferred import: resilience builds on this module.
+        from repro.resilience.bsp import run_bsp_resilient
+
+        return run_bsp_resilient(
+            sub, program, init_val,
+            max_supersteps=max_supersteps, inner_cap=inner_cap,
+            exchange_period=exchange_period, tol=tol, num_vertices=num_vertices,
+            source=source, compute_backend=compute_backend, driver=driver,
+            checkpoint_every=checkpoint_every, ckpt_dir=ckpt_dir, fault_plan=fault_plan,
+        )
     prog = get_program(program)
     check_int32_kernel_labels(prog, sub, compute_backend)
     check_pagerank_num_vertices(prog, num_vertices)
@@ -786,7 +815,7 @@ def run_bsp(
     p = val.shape[0]
 
     if driver == "fused":
-        val, steps, msgs_buf, iters_buf, edges = _fused_bsp(
+        val, steps, _, msgs_buf, iters_buf, edges = _fused_bsp(
             sub,
             val,
             prog=exec_prog,
@@ -1096,9 +1125,17 @@ def make_distributed_stepper(
     tol: float = 0.0,
     num_vertices: int = 0,
     compute_backend: str = "xla",
+    fault_plan=None,
 ):
     """Builds a shard_map'd BSP runner for ANY `VertexProgram`: subgraphs
     sharded 1:1 over `axes`.
+
+    `fault_plan=` (a `repro.resilience.FaultPlan` with
+    `crash_at_superstep=s`) injects a deterministic worker crash: the
+    step loop is capped at s supersteps and the runner raises
+    `WorkerCrashError` if the loop was still running when the cap hit
+    (a run that converges in fewer than s supersteps completes — there
+    is no superstep s to die in).
 
     `axes` may be a single mesh axis name or a tuple (e.g. ("pod","data",
     "model")) whose sizes multiply to the number of subgraphs — this is what
@@ -1117,6 +1154,11 @@ def make_distributed_stepper(
     prog = get_program(prog)
     check_compute_backend(compute_backend)
     check_pagerank_num_vertices(prog, num_vertices)
+    crash_at = None
+    if fault_plan is not None and fault_plan.crash_at_superstep is not None:
+        crash_at = int(fault_plan.crash_at_superstep)
+        if crash_at < num_supersteps:
+            num_supersteps = crash_at  # the doomed superstep never completes
     # Pallas interpret vs compiled is keyed off the MESH platform, not the
     # host process backend: AOT-lowering for a TPU mesh from a CPU host must
     # bake in the compiled kernel, not the interpreter.
@@ -1184,9 +1226,14 @@ def make_distributed_stepper(
             check_int32_kernel_gid(prog, arrays["gid"], compute_backend)
         except jax.errors.JAXTypeError:
             pass
-        if not negate:
-            return sharded(arrays, val)
-        out, msgs, steps, msgs_b, iters_b = sharded(arrays, -val)
-        return -out, msgs, steps, msgs_b, iters_b
+        out, msgs, steps, msgs_b, iters_b = sharded(arrays, -val if negate else val)
+        if negate:
+            out = -out
+        if crash_at is not None and int(steps) >= crash_at:
+            # The loop was still running when the doomed superstep came due.
+            from repro.resilience.faults import WorkerCrashError
+
+            raise WorkerCrashError(superstep=crash_at)
+        return out, msgs, steps, msgs_b, iters_b
 
     return runner

@@ -4,6 +4,16 @@ through the persistent `GraphQueryServer` and report serving metrics
 rate) as one JSON line.
 
   PYTHONPATH=src python -m repro.launch.graph_serve --queries 200 --rate 2000
+
+Chaos mode: `--transient-prob`/`--straggler-prob`/`--malformed-prob` (with
+`--fault-seed`) inject a deterministic `FaultPlan` into the serving path;
+`--max-retries`, `--deadline-ms`, and `--max-queue` exercise the retry/
+timeout/load-shed machinery. The output row then carries the resilience
+counters, and the driver asserts the every-query-accounted-for invariant:
+answered + failed == submitted, zero unhandled exceptions.
+
+  PYTHONPATH=src python -m repro.launch.graph_serve --queries 120 \
+      --transient-prob 0.2 --fault-seed 7 --max-retries 4
 """
 from __future__ import annotations
 
@@ -12,6 +22,7 @@ import json
 
 from repro.api import GraphPipeline
 from repro.graph.generate import rmat
+from repro.resilience import FaultPlan, RetryPolicy
 from repro.serve.trace import synthetic_trace
 
 
@@ -28,26 +39,56 @@ def run_graph_serve(
     programs: tuple = ("bfs", "sssp"),
     compute_backend: str = "xla",
     seed: int = 0,
+    fault_seed: int = 0,
+    transient_prob: float = 0.0,
+    straggler_prob: float = 0.0,
+    straggler_delay_s: float = 0.0,
+    malformed_prob: float = 0.0,
+    max_retries: int = 3,
+    deadline_s=None,
+    max_queue=None,
 ) -> dict:
     """Build graph → partition → serve a trace; returns the report row
     plus the setup facts (the `pipeline_smoke` serving section reuses the
-    same path at smoke scale)."""
+    same path at smoke scale). Non-zero fault probabilities arm the
+    deterministic chaos plan; the run must still terminate every query."""
     graph = rmat(num_vertices, num_edges, seed=seed, a=0.65, b=0.15, c=0.15)
     pipe = GraphPipeline(graph).partition(partitioner, parts=parts)
+    chaos = transient_prob > 0 or straggler_prob > 0 or malformed_prob > 0
+    fault_plan = FaultPlan(
+        seed=fault_seed,
+        transient_error_prob=transient_prob,
+        straggler_prob=straggler_prob,
+        straggler_delay_s=straggler_delay_s,
+        malformed_batch_prob=malformed_prob,
+    ) if chaos else None
     server = pipe.serve(
-        max_batch=max_batch, max_delay_s=max_delay_s, compute_backend=compute_backend
+        max_batch=max_batch, max_delay_s=max_delay_s, compute_backend=compute_backend,
+        fault_plan=fault_plan, retry=RetryPolicy(max_retries=max_retries),
+        deadline_s=deadline_s, max_queue=max_queue,
     )
     trace = synthetic_trace(
         graph, queries, rate_qps=rate_qps,
         mix=tuple((p, 1.0) for p in programs), seed=seed,
     )
     report = server.run_trace(trace)
+    counters = server.resilience_counters()
+    # The resilience invariant: every admitted query terminated, answered
+    # or failed with a named reason — nothing lost, nothing unhandled.
+    if counters["terminated"] != queries:
+        raise AssertionError(
+            f"serving trace lost queries: {counters['terminated']} terminated "
+            f"of {queries} submitted ({counters})"
+        )
     return {
         "graph": {"num_vertices": graph.num_vertices, "num_edges": graph.num_edges,
                   "p": parts, "partitioner": partitioner},
         "trace": {"queries": queries, "rate_qps": rate_qps,
                   "programs": list(programs), "max_batch": max_batch,
                   "max_delay_s": max_delay_s},
+        "faults": {"enabled": chaos, "seed": fault_seed,
+                   "transient_prob": transient_prob, "straggler_prob": straggler_prob,
+                   "malformed_prob": malformed_prob, "max_retries": max_retries},
         **report.row(),
     }
 
@@ -65,6 +106,21 @@ def main(argv=None):
     ap.add_argument("--programs", default="bfs,sssp", help="comma-separated program mix")
     ap.add_argument("--backend", default="xla", choices=("xla", "ref", "pallas"))
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fault-seed", type=int, default=0, help="FaultPlan seed (chaos replay)")
+    ap.add_argument("--transient-prob", type=float, default=0.0,
+                    help="per-attempt injected transient backend error probability")
+    ap.add_argument("--straggler-prob", type=float, default=0.0,
+                    help="per-batch injected straggler probability")
+    ap.add_argument("--straggler-delay-ms", type=float, default=10.0,
+                    help="virtual delay charged per injected straggler")
+    ap.add_argument("--malformed-prob", type=float, default=0.0,
+                    help="per-attempt injected malformed-batch probability")
+    ap.add_argument("--max-retries", type=int, default=3,
+                    help="bounded retry budget per micro-batch")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-query deadline from arrival (default: none)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="admission queue bound (overflow load-sheds)")
     args = ap.parse_args(argv)
     out = run_graph_serve(
         num_vertices=args.vertices, num_edges=args.edges, parts=args.parts,
@@ -72,6 +128,12 @@ def main(argv=None):
         max_batch=args.max_batch, max_delay_s=args.max_delay_ms / 1000.0,
         programs=tuple(p.strip() for p in args.programs.split(",") if p.strip()),
         compute_backend=args.backend, seed=args.seed,
+        fault_seed=args.fault_seed, transient_prob=args.transient_prob,
+        straggler_prob=args.straggler_prob,
+        straggler_delay_s=args.straggler_delay_ms / 1000.0,
+        malformed_prob=args.malformed_prob, max_retries=args.max_retries,
+        deadline_s=None if args.deadline_ms is None else args.deadline_ms / 1000.0,
+        max_queue=args.max_queue,
     )
     print(json.dumps(out))
     return out

@@ -1,0 +1,44 @@
+"""repro.resilience — deterministic fault injection, superstep
+checkpoint/resume, and the retry/backoff/circuit-breaker vocabulary the
+serving tier degrades with.
+
+Three layers (docs/api.md "Fault tolerance"):
+
+  * `FaultPlan` — a seeded, frozen chaos schedule (worker crash at
+    superstep s, transient backend errors, stragglers, malformed
+    batches); every draw is a pure function of (seed, stream, index) so
+    scenarios replay bit-for-bit.
+  * `run_bsp_resilient` / `resume_bsp` — segmented BSP execution that
+    snapshots the value carry + stats buffers through
+    `repro.checkpoint.ckpt` and recovers from an injected crash to a
+    final state bit-identical to an uninterrupted run. Reached from
+    `run_bsp(..., checkpoint_every=k, ckpt_dir=...)` and therefore from
+    `GraphPipeline.run`.
+  * `RetryPolicy` / `CircuitBreaker` — bounded retry with deterministic
+    backoff jitter and consecutive-failure degradation
+    (pallas -> xla compute, fused batch -> host driver) wired into
+    `GraphQueryServer`.
+"""
+from repro.resilience.bsp import resume_bsp, run_bsp_resilient
+from repro.resilience.faults import (
+    FaultError,
+    FaultPlan,
+    LoadShedError,
+    MalformedBatchError,
+    TransientBackendError,
+    WorkerCrashError,
+)
+from repro.resilience.retry import CircuitBreaker, RetryPolicy
+
+__all__ = [
+    "CircuitBreaker",
+    "FaultError",
+    "FaultPlan",
+    "LoadShedError",
+    "MalformedBatchError",
+    "RetryPolicy",
+    "TransientBackendError",
+    "WorkerCrashError",
+    "resume_bsp",
+    "run_bsp_resilient",
+]

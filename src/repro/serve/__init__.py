@@ -11,6 +11,13 @@ steady-state traffic never recompiles. Per-query results and `BSPStats`
 are bit-identical to single-source `run_bsp` calls — convergence masking
 means a query pays only its own supersteps, not the batch max.
 
+The serving path is resilient (`repro.resilience`): per-query deadlines,
+a bounded admission queue with reject-newest load shedding, bounded
+retry with deterministic backoff for transient backend faults, and a
+circuit breaker that degrades pallas → xla and fused batch → host driver
+under consecutive failures — bit-identical answers at every rung. Every
+admitted query terminates as a `QueryResult` or a named `QueryFailure`.
+
 Entry points: `GraphPipeline.serve()` returns a `GraphQueryServer`;
 `GraphPipeline.run_batch()` is the one-shot batched call; the
 `repro.launch.graph_serve` CLI replays a synthetic power-law trace.
@@ -18,7 +25,7 @@ Entry points: `GraphPipeline.serve()` returns a `GraphQueryServer`;
 from repro.serve.cache import ExecutableCache
 from repro.serve.padding import DEFAULT_BUCKETS, bucket_size, pad_batch_rows, padding_waste
 from repro.serve.queue import AdmissionQueue, Query
-from repro.serve.server import GraphQueryServer, QueryResult, ServerReport
+from repro.serve.server import GraphQueryServer, QueryFailure, QueryResult, ServerReport
 from repro.serve.trace import synthetic_trace
 
 __all__ = [
@@ -27,6 +34,7 @@ __all__ = [
     "ExecutableCache",
     "GraphQueryServer",
     "Query",
+    "QueryFailure",
     "QueryResult",
     "ServerReport",
     "bucket_size",

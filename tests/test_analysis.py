@@ -472,6 +472,71 @@ def test_fingerprint_is_line_number_free():
     assert fs1[0].fingerprint == fs2[0].fingerprint
 
 
+# ------------------------------------------------------------------- EH01
+
+
+EH_BAD_PASS = """
+    def load(path):
+        try:
+            return open(path).read()
+        except Exception:
+            pass
+"""
+
+EH_BAD_BARE = """
+    def load(path):
+        try:
+            return open(path).read()
+        except:
+            ...
+"""
+
+EH_BAD_TUPLE = """
+    def load(path):
+        try:
+            return open(path).read()
+        except (ValueError, BaseException):
+            pass
+"""
+
+EH_CLEAN_SPECIFIC = """
+    def load(path):
+        try:
+            return open(path).read()
+        except FileNotFoundError:
+            pass
+"""
+
+EH_CLEAN_HANDLED = """
+    import logging
+
+    def load(path):
+        try:
+            return open(path).read()
+        except Exception as e:
+            logging.warning("load failed: %s", e)
+            return None
+"""
+
+
+def test_eh01_flags_swallowed_broad_handlers():
+    for src in (EH_BAD_PASS, EH_BAD_BARE, EH_BAD_TUPLE):
+        fs = run(src, select=["EH01"])
+        assert codes(fs) == ["EH01"], src
+        assert fs[0].severity == "warning"
+        assert "swallows" in fs[0].message
+
+
+def test_eh01_allows_specific_or_handled():
+    assert run(EH_CLEAN_SPECIFIC, select=["EH01"]) == []
+    assert run(EH_CLEAN_HANDLED, select=["EH01"]) == []
+
+
+def test_eh01_honors_noqa():
+    src = EH_BAD_PASS.replace("except Exception:", "except Exception:  # noqa")
+    assert run(src, select=["EH01"]) == []
+
+
 # ---------------------------------------------------------------- CLI gate
 
 
