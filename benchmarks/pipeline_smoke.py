@@ -15,10 +15,14 @@ through the new `repro.serve` tier (asserted >= 2x), plus a synthetic
 power-law trace replayed through the `GraphQueryServer` admission queue
 (p50/p99 queue latency, padding waste, executable-cache hit rate; the
 cache is asserted to compile at most once per (program, bucket)), and a
-resilience section (schema 5): crash/resume bit-parity
+resilience section: crash/resume bit-parity
 (`resume_matches_uninterrupted` asserted) plus a chaos serving trace with
 injected transient faults (retry/shed counters; every query asserted to
-terminate answered-or-named-failure).
+terminate answered-or-named-failure), and a megakernel section (schema 6):
+per-program xla-fused vs Pallas-superstep-megakernel walls with asserted
+bit-parity (interpreter walls on a CPU host; the compiled path lights up
+on accelerators) plus the window-commit partition wall vs the faithful
+scan (`matches_scan` asserted) and the frozen chunked commit.
 
 Two speedup figures per engine program:
   - wall_speedup: measured host/fused wall ratio. On a CPU host, dispatch
@@ -43,6 +47,7 @@ from pathlib import Path
 import numpy as np
 
 from repro.api import GraphPipeline, list_partitioners
+from repro.core.streaming import streaming_chunked_partition, streaming_scan_partition
 from repro.graph.build import build_subgraphs, build_subgraphs_legacy
 from repro.graph.generate import rmat
 
@@ -108,6 +113,19 @@ def _med(fn, repeats: int) -> float:
     return float(np.median(walls))
 
 
+def _best(fn, repeats: int) -> float:
+    """Min-of-repeats: the standard microbenchmark estimator for walls
+    whose noise is one-sided (GC pauses, scheduler preemption only ever
+    ADD time). The engine host-vs-fused ratios sit near 1 on a CPU host,
+    where median-of-3 jitter used to flip speedups below 1.0."""
+    walls = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        walls.append(time.perf_counter() - t0)
+    return float(np.min(walls))
+
+
 def _dist_pagerank_section() -> dict:
     """Distributed PageRank stats on an 8-device host mesh. XLA locks the
     device count at first init, so this runs in a subprocess with its own
@@ -167,6 +185,79 @@ def _serving_section(repeats: int) -> dict:
             "supersteps_per_query": batch_run.supersteps_per_query.tolist(),
         },
         "trace": trace_row,
+    }
+
+
+def _megakernel_section(repeats: int) -> dict:
+    """Tentpole before/after (schema 6): the xla fused driver vs the Pallas
+    superstep megakernel (`compute_backend="pallas"` routes the whole local
+    stage through `ops.bsp_superstep`) for every registered program, plus
+    the speculative window-commit partition wall vs the faithful scan and
+    the frozen chunked commit.
+
+    Off-TPU the megakernel runs under the Pallas INTERPRETER, so the pallas
+    walls here track the parity cost on a CPU host, not accelerator
+    speedup — the compiled path lights up on TPU. What CI holds the line on
+    is the parity flags: values and BSPStats bit-identical to the xla path
+    per program, and window-commit assignments identical to the scan.
+    Runs on a smaller graph than the main engine section (interpreter
+    walls, not device walls)."""
+    block_e = 256
+    graph = rmat(1 << 11, 12_000, seed=9, a=0.65, b=0.15, c=0.15)
+    pipe = GraphPipeline(graph).partition("ebg_chunked", parts=8)
+    programs: dict = {}
+    for prog, kw in PROGRAMS:
+        runs, wall = {}, {}
+        for backend in ("xla", "pallas"):
+            pipe.run(prog, compute_backend=backend, block_e=block_e, **kw)  # compile
+            runs[backend] = pipe.run(prog, compute_backend=backend, block_e=block_e, **kw)
+            wall[backend] = _best(
+                lambda b=backend: pipe.run(prog, compute_backend=b, block_e=block_e, **kw),
+                repeats,
+            )
+        x, k = runs["xla"], runs["pallas"]
+        parity = (
+            bool(np.array_equal(x.values, k.values))
+            and x.stats.supersteps == k.stats.supersteps
+            and bool(np.array_equal(x.stats.messages_per_step_worker,
+                                    k.stats.messages_per_step_worker))
+            and bool(np.array_equal(x.stats.inner_iters_per_step,
+                                    k.stats.inner_iters_per_step))
+        )
+        programs[prog] = {
+            "supersteps": x.stats.supersteps,
+            "xla_wall_s": round(wall["xla"], 4),
+            "pallas_wall_s": round(wall["pallas"], 4),
+            "parity": parity,
+        }
+
+    scan = streaming_scan_partition(graph, 8, "ebv")
+    win = streaming_chunked_partition(graph, 8, "ebv", block=block_e, commit="window")
+    walls = {
+        "scan_wall_s": _best(lambda: streaming_scan_partition(graph, 8, "ebv"), repeats),
+        "frozen_wall_s": _best(
+            lambda: streaming_chunked_partition(graph, 8, "ebv", block=block_e, commit="frozen"),
+            repeats,
+        ),
+        "window_wall_s": _best(
+            lambda: streaming_chunked_partition(graph, 8, "ebv", block=block_e, commit="window"),
+            repeats,
+        ),
+    }
+    window = {
+        "scorer": "ebv",
+        "block": block_e,
+        **{k: round(v, 4) for k, v in walls.items()},
+        "window_speedup_vs_scan": round(walls["scan_wall_s"] / walls["window_wall_s"], 2),
+        "matches_scan": bool(np.array_equal(win.part, scan.part)),
+    }
+    return {
+        "graph": {"family": "megakernel_smoke", "num_vertices": graph.num_vertices,
+                  "num_edges": graph.num_edges, "p": 8},
+        "block_e": block_e,
+        "programs": programs,
+        "parity_all": all(row["parity"] for row in programs.values()),
+        "window_commit": window,
     }
 
 
@@ -266,7 +357,7 @@ def main(repeats: int = 3, out_path: Path = OUT) -> dict:
         pipe.prepare(prog)
         pipe.run(prog, driver="host", **kw)  # compile outside the timers
         run = pipe.run(prog, driver="fused", **kw)  # warmup doubles as the stats run
-        wall = {d: _med(lambda d=d: pipe.run(prog, driver=d, **kw), repeats) for d in ("host", "fused")}
+        wall = {d: _best(lambda d=d: pipe.run(prog, driver=d, **kw), repeats) for d in ("host", "fused")}
         steps = run.stats.supersteps
         engine[prog] = {
             "supersteps": steps,
@@ -293,9 +384,10 @@ def main(repeats: int = 3, out_path: Path = OUT) -> dict:
     dist_pr = _dist_pagerank_section()
     serving = _serving_section(repeats)
     resilience = _resilience_section()
+    megakernel = _megakernel_section(repeats)
 
     data = {
-        "schema": 5,
+        "schema": 6,
         "graph": {"family": "twitter_like_smoke", "num_vertices": graph.num_vertices,
                   "num_edges": graph.num_edges, "p": P},
         "partition": {"partitioner": "ebg_chunked", "wall_s": round(partition_s, 3)},
@@ -317,6 +409,7 @@ def main(repeats: int = 3, out_path: Path = OUT) -> dict:
         "dist": {"pr": dist_pr},
         "serving": serving,
         "resilience": resilience,
+        "megakernel": megakernel,
     }
     # The structural claims CI holds the line on: the fused driver turns
     # one-dispatch-per-superstep into one dispatch per run, distributed
@@ -333,6 +426,14 @@ def main(repeats: int = 3, out_path: Path = OUT) -> dict:
     # to the uninterrupted run, and the chaos trace lost nothing.
     assert resilience["crash_resume"]["crashed"], resilience["crash_resume"]
     assert resilience["crash_resume"]["resume_matches_uninterrupted"], resilience["crash_resume"]
+    # Megakernel claims (schema 6): the Pallas superstep path is
+    # bit-identical to xla for every program, window commits reproduce the
+    # scan exactly, and the fused driver does not LOSE wall time vs host —
+    # including reach, whose min-of-repeats wall used to flip below 1.0
+    # under median-of-3 jitter.
+    assert megakernel["parity_all"], megakernel["programs"]
+    assert megakernel["window_commit"]["matches_scan"], megakernel["window_commit"]
+    assert engine["reach"]["wall_speedup"] >= 1.0, engine["reach"]
 
     out_path.write_text(json.dumps(data, indent=2) + "\n")
     e = data["engine"]["total"]
@@ -348,7 +449,9 @@ def main(repeats: int = 3, out_path: Path = OUT) -> dict:
         f"{serving['batch']['throughput_speedup']}x, cache hit "
         f"{serving['trace']['cache']['hit_rate']} | resume parity "
         f"{resilience['crash_resume']['resume_matches_uninterrupted']}, chaos retries "
-        f"{resilience['chaos_serving']['retries']} -> {out_path.name}"
+        f"{resilience['chaos_serving']['retries']} | megakernel parity "
+        f"{megakernel['parity_all']}, window "
+        f"{megakernel['window_commit']['window_speedup_vs_scan']}x vs scan -> {out_path.name}"
     )
     return data
 

@@ -34,10 +34,25 @@ else
   # registered VertexProgram, host-vs-fused driver comparison,
   # distributed-PageRank section, the serving section: batched-vs-
   # sequential throughput + trace replay through the GraphQueryServer,
-  # and the schema-5 resilience section: crash/resume bit-parity with
+  # the resilience section: crash/resume bit-parity with
   # resume_matches_uninterrupted asserted + a chaos serving trace with
-  # retry/shed counters) so the perf trajectory is tracked.
+  # retry/shed counters, and the schema-6 megakernel section: per-program
+  # xla vs Pallas-superstep walls + window-commit partition wall) so the
+  # perf trajectory is tracked.
   python -m benchmarks.pipeline_smoke
+  # Hold the megakernel contract in the emitted artifact itself: schema 6,
+  # megakernel section present, and every parity flag true (bit-identical
+  # xla/pallas engine results and window-commit == scan assignments).
+  python - <<'PY'
+import json
+d = json.load(open("BENCH_pipeline.json"))
+assert d["schema"] == 6, d["schema"]
+mk = d["megakernel"]
+assert mk["parity_all"] is True, mk["programs"]
+assert all(row["parity"] is True for row in mk["programs"].values()), mk["programs"]
+assert mk["window_commit"]["matches_scan"] is True, mk["window_commit"]
+print("megakernel section OK: schema 6, parity flags all true")
+PY
 fi
 # Serving smoke trace: a tiny end-to-end replay through the admission
 # queue + executable cache, in BOTH invocation modes — a broken server

@@ -33,6 +33,22 @@ def check_compute_backend(backend) -> str:
     return backend
 
 
+# Chunked-commit semantics: "frozen" scores every edge of a block against
+# block-start membership (the classic chunked staleness trade); "window"
+# is the speculative window commit — blocks are scored in one shot but
+# conflicted edges replay against live state, making the assignments
+# bit-identical to the unblocked scan at every block size.
+COMMIT_MODES = ("frozen", "window")
+
+
+def check_commit_mode(commit) -> str:
+    _require(
+        commit in COMMIT_MODES,
+        f"commit must be one of {COMMIT_MODES}, got {commit!r}",
+    )
+    return commit
+
+
 def _validate_seed(seed) -> None:
     _require(
         isinstance(seed, int) and not isinstance(seed, bool) and seed >= 0,
@@ -67,7 +83,9 @@ class EBGConfig(PartitionerConfig):
     (ignored by the unblocked scan); `sort_edges` toggles the §IV-C
     degree-sum edge ordering; `compute_backend` selects the chunked
     variant's score-phase implementation ("xla" dense bool membership,
-    "ref"/"pallas" packed-bitset membership via repro.kernels).
+    "ref"/"pallas" packed-bitset membership via repro.kernels); `commit`
+    picks the chunked commit semantics (see COMMIT_MODES — "window" makes
+    any block size bit-identical to the faithful scan).
     """
 
     alpha: float = 1.0
@@ -75,6 +93,7 @@ class EBGConfig(PartitionerConfig):
     block: int = 256
     sort_edges: bool = True
     compute_backend: str = "xla"
+    commit: str = "frozen"
 
     def validate(self) -> None:
         _require(
@@ -91,6 +110,7 @@ class EBGConfig(PartitionerConfig):
         )
         _require(isinstance(self.sort_edges, bool), f"sort_edges must be a bool, got {self.sort_edges!r}")
         check_compute_backend(self.compute_backend)
+        check_commit_mode(self.commit)
 
 
 # The paper calls the algorithm EBV; the repo's modules call it EBG.
@@ -109,6 +129,7 @@ def _validate_streaming_knobs(cfg) -> None:
     )
     _require(isinstance(cfg.sort_edges, bool), f"sort_edges must be a bool, got {cfg.sort_edges!r}")
     check_compute_backend(cfg.compute_backend)
+    check_commit_mode(cfg.commit)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -128,6 +149,7 @@ class HDRFConfig(PartitionerConfig):
     block: int = 256
     sort_edges: bool = False
     compute_backend: str = "xla"
+    commit: str = "frozen"
 
     def validate(self) -> None:
         _require(
@@ -146,6 +168,7 @@ class GreedyConfig(PartitionerConfig):
     block: int = 256
     sort_edges: bool = False
     compute_backend: str = "xla"
+    commit: str = "frozen"
 
     def validate(self) -> None:
         _validate_streaming_knobs(self)

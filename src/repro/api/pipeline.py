@@ -327,7 +327,9 @@ class GraphPipeline:
         ("fused" single-dispatch while_loop, the default, or "host" —
         one dispatch per superstep, kept for A/B). Extra kwargs flow to
         the engine (max_supersteps, inner_cap, exchange_period, tol,
-        num_iters — the PageRank alias of max_supersteps — damping, ...),
+        num_iters — the PageRank alias of max_supersteps — damping,
+        block_e — the megakernel edge-block size for kernel backends,
+        see docs/api.md "Performance guide" — ...),
         including the fault-tolerance knobs (checkpoint_every + ckpt_dir
         for superstep snapshots resumable via repro.resilience.resume_bsp,
         and fault_plan for deterministic fault injection — docs/api.md
@@ -418,6 +420,7 @@ class GraphPipeline:
         tol: float = 0.0,
         source: Optional[int] = None,
         compute_backend: str = "xla",
+        block_e: int = 512,
     ) -> tuple[np.ndarray, BSPStats]:
         check_int32_kernel_labels(prog, sub, compute_backend)
         if max_supersteps is not None:  # sim-speak (and the num_iters alias)
@@ -432,6 +435,7 @@ class GraphPipeline:
         stepper = make_distributed_stepper(
             mesh, axes, prog, statics, num_supersteps=num_supersteps, inner_cap=inner_cap,
             tol=tol, num_vertices=self.graph.num_vertices, compute_backend=compute_backend,
+            block_e=block_e,
         )
         init = prog.init(sub, num_vertices=self.graph.num_vertices, source=source)
         with mesh:
@@ -468,6 +472,7 @@ class GraphPipeline:
         pad_multiple: Optional[int] = None,
         num_vertices: Optional[int] = None,
         compute_backend: str = "xla",
+        block_e: int = 512,
     ) -> LoweredBSP:
         """AOT-lower the distributed BSP stepper (abstract or concrete) for
         ANY registered program.
@@ -497,7 +502,7 @@ class GraphPipeline:
         arrays, statics = spec.array_specs()
         stepper = make_distributed_stepper(
             mesh, axes, prog, statics, num_supersteps=num_supersteps, inner_cap=inner_cap,
-            tol=tol, num_vertices=nv, compute_backend=compute_backend,
+            tol=tol, num_vertices=nv, compute_backend=compute_backend, block_e=block_e,
         )
         spec2 = P(axes, None)
         spec3 = P(axes, None, None)

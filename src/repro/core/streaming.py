@@ -340,12 +340,13 @@ def streaming_scan_partition(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("num_parts", "num_vertices", "block", "backend", "weighted", "balance"),
+    static_argnames=("num_parts", "num_vertices", "block", "backend", "weighted", "balance",
+                     "window"),
 )
 def _streaming_chunked(
     src, dst, valid, wu, wv, num_real_edges, *, num_parts: int, num_vertices: int,
     block: int, backend: str, weighted: bool, balance: str,
-    ce: float, cv: float, eps: float,
+    ce: float, cv: float, eps: float, window: bool = False,
 ):
     E = src.shape[0]
     p = num_parts
@@ -371,29 +372,40 @@ def _streaming_chunked(
             else:
                 ub, vb, valb = uv_block
             # Vectorized membership lookups against block-start keep: (p, B).
-            mu = (~keep[:, ub]).astype(jnp.float32)
-            mv = (~keep[:, vb]).astype(jnp.float32)
-            memb = mu + mv
-            wmemb = wub[None, :] * mu + wvb[None, :] * mv if weighted else memb
+            mu0 = (~keep[:, ub]).astype(jnp.float32)
+            mv0 = (~keep[:, vb]).astype(jnp.float32)
 
             # Sequential exact commit of balance terms within the block. Pad
             # edges are scored (uniform work per lane) but never committed:
             # they leave e_count/v_count untouched and route to row `p`.
             def body(j, carry):
-                e_c, v_c, parts = carry
+                e_c, v_c, mu, mv, parts = carry
                 if balance == "static":
                     norm = inv_e
                 else:
                     norm = 1.0 / (eps + (jnp.max(e_c) - jnp.min(e_c)))
-                score = wmemb[:, j] + ce * e_c * norm + cv * v_c * inv_v
+                gain = wub[j] * mu[:, j] + wvb[j] * mv[:, j] if weighted else mu[:, j] + mv[:, j]
+                score = gain + ce * e_c * norm + cv * v_c * inv_v
                 i = jnp.argmin(score).astype(jnp.int32)
                 live = valb[j].astype(jnp.float32)
                 e_c = e_c.at[i].add(live)
-                v_c = v_c.at[i].add(live * memb[i, j])
-                return e_c, v_c, parts.at[j].set(jnp.where(valb[j], i, p))
+                v_c = v_c.at[i].add(live * (mu[i, j] + mv[i, j]))
+                if window:
+                    # Speculative window commit: the block was scored in one
+                    # shot from block-start state; replay this commit onto the
+                    # remaining columns (clear the winner's miss rows where a
+                    # later edge touches the committed endpoints) so only
+                    # CONFLICTED edges see corrected scores — bit-identical
+                    # to the one-edge-at-a-time scan driver.
+                    hit_u = (ub == ub[j]) | (ub == vb[j])
+                    hit_v = (vb == ub[j]) | (vb == vb[j])
+                    mu = mu.at[i].set(jnp.where(hit_u & valb[j], 0.0, mu[i]))
+                    mv = mv.at[i].set(jnp.where(hit_v & valb[j], 0.0, mv[i]))
+                return e_c, v_c, mu, mv, parts.at[j].set(jnp.where(valb[j], i, p))
 
-            e_count, v_count, parts = jax.lax.fori_loop(
-                0, ub.shape[0], body, (e_count, v_count, jnp.zeros((ub.shape[0],), jnp.int32))
+            e_count, v_count, _, _, parts = jax.lax.fori_loop(
+                0, ub.shape[0], body,
+                (e_count, v_count, mu0, mv0, jnp.zeros((ub.shape[0],), jnp.int32)),
             )
             # Batched keep update after the block commits; pad edges carry the
             # out-of-bounds row `p` and are dropped by the scatter.
@@ -424,6 +436,7 @@ def _streaming_chunked(
                 keep_bits, e_count, v_count, ub, vb, valb,
                 alpha=ce, beta=cv, inv_e=inv_e, inv_v=inv_v,
                 eps=eps, balance=balance, wu=wub, wv=wvb, impl=backend,
+                window=window,
             )
             return (keep_bits, e_count, v_count), parts
 
@@ -445,6 +458,7 @@ def streaming_chunked_partition(
     block: int = 256,
     sort_edges: Optional[bool] = None,
     compute_backend: str = "xla",
+    commit: str = "frozen",
 ) -> PartitionResult:
     """Blocked throughput variant of the stream (block=1 ≡ faithful) for
     any registered scorer.
@@ -452,8 +466,19 @@ def streaming_chunked_partition(
     compute_backend "xla" scores against the dense bool membership table;
     "ref"/"pallas" run each block through the fused packed-bitset
     `repro.kernels.ops.ebg_commit_block` — assignments are identical.
+
+    commit="frozen" (default) scores every edge in a block against the
+    block-start membership (the chunked quality/throughput trade);
+    commit="window" is the speculative window commit: the block is still
+    scored in one vectorized shot, but each commit replays its membership
+    consequences onto the remaining in-block columns, so only conflicted
+    edges are rescored and the assignments are BIT-IDENTICAL to the scan
+    driver at every block size (tests/test_megakernel.py pins this for
+    all registered scorers).
     """
     check_compute_backend(compute_backend)
+    if commit not in ("frozen", "window"):
+        raise ValueError(f"commit must be 'frozen' or 'window', got {commit!r}")
     sc = get_scorer(scorer)
     ce, cv, eps = sc.coefficients(ce, cv, eps)
     if sort_edges is None:
@@ -497,6 +522,7 @@ def streaming_chunked_partition(
         ce=ce,
         cv=cv,
         eps=eps,
+        window=commit == "window",
     )
     part = part[:E]
     return PartitionResult(part=part, num_parts=num_parts, order=order)
@@ -548,11 +574,13 @@ def ebg_partition_chunked(
     block: int = 256,
     sort_edges: bool = True,
     compute_backend: str = "xla",
+    commit: str = "frozen",
 ) -> PartitionResult:
-    """Blocked EBG (beyond-paper throughput variant; block=1 ≡ faithful)."""
+    """Blocked EBG (beyond-paper throughput variant; block=1 ≡ faithful,
+    commit="window" ≡ faithful at ANY block size)."""
     return streaming_chunked_partition(
         graph, num_parts, EBV, ce=alpha, cv=beta, block=block,
-        sort_edges=sort_edges, compute_backend=compute_backend,
+        sort_edges=sort_edges, compute_backend=compute_backend, commit=commit,
     )
 
 
@@ -575,11 +603,12 @@ def hdrf_partition(
     block: int = 256,
     sort_edges: bool = False,
     compute_backend: str = "xla",
+    commit: str = "frozen",
 ) -> PartitionResult:
     """HDRF: highest-degree-replicated-first (paper baseline)."""
     return streaming_chunked_partition(
         graph, num_parts, HDRF, ce=lam, eps=eps, block=block,
-        sort_edges=sort_edges, compute_backend=compute_backend,
+        sort_edges=sort_edges, compute_backend=compute_backend, commit=commit,
     )
 
 
@@ -601,9 +630,10 @@ def greedy_partition(
     block: int = 256,
     sort_edges: bool = False,
     compute_backend: str = "xla",
+    commit: str = "frozen",
 ) -> PartitionResult:
     """PowerGraph Greedy: A(u)∩A(v) heuristic (paper baseline)."""
     return streaming_chunked_partition(
         graph, num_parts, GREEDY, eps=eps, block=block,
-        sort_edges=sort_edges, compute_backend=compute_backend,
+        sort_edges=sort_edges, compute_backend=compute_backend, commit=commit,
     )

@@ -402,17 +402,12 @@ def _relax_xla(prog: VertexProgram, sub: SubgraphSet, v: jax.Array) -> jax.Array
     return new
 
 
-def _make_relax_kernel(
-    prog: VertexProgram, sub: SubgraphSet, backend: str, interpret: bool | None = None
-):
-    """One local relaxation sweep via repro.kernels min-plus segment reduce,
-    vmapped over the worker axis. Operates on f32 values (see the INF
-    remapping in `_local_fixpoint`); padded edges carry the INF weight
-    identity, matching the kernels' convention. `interpret=None` lets ops
-    sniff the host backend; the distributed stepper passes the MESH
-    platform instead, so lowering for a TPU mesh from a CPU host bakes in
-    the compiled kernel, not the interpreter."""
-    nseg = sub.max_v + 1
+def _relax_stream(prog: VertexProgram, sub: SubgraphSet):
+    """[p, E(+E)] (lsrc, ldst, weight) edge stream for `ops.bsp_superstep`:
+    the forward CSR half and, for bidirectional programs, the reversed
+    (src-sorted) half concatenated behind it. Weights are the semiring
+    addend in f32 with padded edges carrying the INF identity; each half is
+    dst-sorted, which is all the megakernel's rank compression needs."""
 
     def edge_w(weight, mask):
         w = _edge_addend(prog, weight, jnp.float32)
@@ -420,24 +415,14 @@ def _make_relax_kernel(
             w = jnp.zeros_like(weight)
         return jnp.where(mask, w, INF_F32)
 
-    w_fwd = edge_w(sub.weight, sub.edge_mask)
-    w_bwd = edge_w(sub.weight_s, sub.edge_mask_s) if prog.bidirectional else None
-    op = jax.vmap(
-        functools.partial(ops.segment_min_plus, num_out=nseg, impl=backend, interpret=interpret),
-        in_axes=(0, 0, 0, 0),
-    )
-
-    def relax(v):
-        # segment_min_plus seeds the output with v, so `op` returns the
-        # fully relaxed vector (no extra jnp.minimum with v needed).
-        new = op(sub.lsrc, sub.ldst, w_fwd, v)
-        if prog.bidirectional:
-            # Reverse direction: reduce into sources using the src-sorted
-            # edge copy (lsrc_s is the sorted/destination role here).
-            new = jnp.minimum(new, op(sub.ldst_s, sub.lsrc_s, w_bwd, v))
-        return new
-
-    return relax
+    lsrc, ldst, w = sub.lsrc, sub.ldst, edge_w(sub.weight, sub.edge_mask)
+    if prog.bidirectional:
+        # Reverse direction: reduce into sources using the src-sorted edge
+        # copy (lsrc_s is the sorted/destination role here).
+        lsrc = jnp.concatenate([lsrc, sub.ldst_s], axis=1)
+        ldst = jnp.concatenate([ldst, sub.lsrc_s], axis=1)
+        w = jnp.concatenate([w, edge_w(sub.weight_s, sub.edge_mask_s)], axis=1)
+    return lsrc, ldst, w
 
 
 def _local_fixpoint(
@@ -447,22 +432,33 @@ def _local_fixpoint(
     inner_cap: int,
     backend: str = "xla",
     interpret: bool | None = None,
+    block_e: int = 512,
 ):
     """Batched local fixpoint. val: [p, max_v+1] (last slot = dump).
 
-    backend "xla" runs generic segment ops; "ref"/"pallas" route through
-    repro.kernels.ops (f32 min-plus). For int32 programs (CC/BFS/REACH) the
-    kernel path remaps INF_I32 <-> INF_F32 and runs the loop in f32 — exact
-    only for values below 2^24 (`run_bsp` enforces this; graphs beyond it
-    must use backend "xla").
+    backend "xla" runs generic segment ops; "ref"/"pallas" route the WHOLE
+    local stage (every relaxation pass + the per-worker convergence flag)
+    through the `ops.bsp_superstep` megakernel in one launch. For int32
+    programs (CC/BFS/REACH) the kernel path remaps INF_I32 <-> INF_F32 and
+    runs in f32 — exact only for values below 2^24 (`run_bsp` enforces
+    this; graphs beyond it must use backend "xla"). The fused drivers hoist
+    that remap to the run boundary by passing an f32 exec view of the
+    program; this in-place branch only pays per call for the host driver.
     """
-    if backend == "xla":
-        relax = functools.partial(_relax_xla, prog, sub)
-    else:
-        relax = _make_relax_kernel(prog, sub, backend, interpret)
-
     to_f32 = backend != "xla" and prog.dtype == "int32"
     v0 = jnp.where(val == INF_I32, INF_F32, val.astype(jnp.float32)) if to_f32 else val
+
+    if backend != "xla":
+        lsrc, ldst, w = _relax_stream(prog, sub)
+        new_val, iters = ops.bsp_superstep(
+            lsrc, ldst, w, v0, num_out=sub.max_v + 1, combine="min",
+            inner_cap=inner_cap, impl=backend, block_e=block_e, interpret=interpret,
+        )
+        if to_f32:
+            new_val = jnp.where(new_val >= INF_F32, INF_I32, new_val.astype(jnp.int32))
+        return new_val, iters
+
+    relax = functools.partial(_relax_xla, prog, sub)
 
     def body_count(carry):
         v, ch, it, iters = carry
@@ -474,8 +470,6 @@ def _local_fixpoint(
     carry = (v0, jnp.ones((p,), bool), jnp.int32(0), jnp.zeros((p,), jnp.int32))
     carry = jax.lax.while_loop(lambda c: jnp.any(c[1]) & (c[2] < inner_cap), body_count, carry)
     new_val, _, _, iters = carry
-    if to_f32:
-        new_val = jnp.where(new_val >= INF_F32, INF_I32, new_val.astype(jnp.int32))
     return new_val, iters
 
 
@@ -485,27 +479,28 @@ def _local_sweep(
     val: jax.Array,
     backend: str = "xla",
     interpret: bool | None = None,
+    block_e: int = 512,
 ) -> jax.Array:
     """One out-degree-normalized push-sum pass (PageRank's local compute):
     each vertex pushes val/outdeg along its out-edges, summed at dst."""
     p = val.shape[0]
     nseg = sub.max_v + 1
     outdeg = jnp.concatenate([sub.out_degree, jnp.ones((p, 1), jnp.float32)], axis=1)
+    if backend != "xla":
+        # Megakernel path: the share division is fused at the gather, padded
+        # edges carry weight 0 (the sum identity and the kernel's pad mask).
+        scale = sub.edge_mask.astype(jnp.float32)
+        new, _ = ops.bsp_superstep(
+            sub.lsrc, sub.ldst, scale, val, num_out=nseg, combine="sum",
+            out_degree=outdeg, impl=backend, block_e=block_e, interpret=interpret,
+        )
+        return new
     share = jnp.where(outdeg > 0, val / outdeg, 0.0)
-    if backend == "xla":
-        data = jnp.take_along_axis(share, sub.lsrc, axis=1)
-        data = jnp.where(sub.edge_mask, data, 0.0)
-        return jax.vmap(
-            lambda d, s: jax.ops.segment_sum(d, s, num_segments=nseg, indices_are_sorted=True)
-        )(data, sub.ldst)
-    # sum-times segment reduce: padded edges carry scale=0 (sum identity).
-    scale = sub.edge_mask.astype(jnp.float32)
+    data = jnp.take_along_axis(share, sub.lsrc, axis=1)
+    data = jnp.where(sub.edge_mask, data, 0.0)
     return jax.vmap(
-        functools.partial(
-            ops.segment_sum_scaled, num_out=nseg, impl=backend, interpret=interpret
-        ),
-        in_axes=(0, 0, 0, 0),
-    )(sub.lsrc, sub.ldst, scale, share)
+        lambda d, s: jax.ops.segment_sum(d, s, num_segments=nseg, indices_are_sorted=True)
+    )(data, sub.ldst)
 
 
 # --------------------------------------------------- THE generic superstep
@@ -534,6 +529,7 @@ def _superstep(
     num_vertices: int = 0,
     backend: str = "xla",
     interpret: bool | None = None,
+    block_e: int = 512,
 ):
     """ONE BSP superstep for ANY program. Returns
     (new_val, per-worker msg count, per-worker inner iters, L1 delta).
@@ -551,9 +547,9 @@ def _superstep(
     # programs carry the per-vertex partial aggregate (one sweep = one
     # inner iteration of comp work per worker).
     if prog.local == "fixpoint":
-        state, iters = _local_fixpoint(prog, sub, val, inner_cap, backend, interpret)
+        state, iters = _local_fixpoint(prog, sub, val, inner_cap, backend, interpret, block_e)
     else:
-        state = _local_sweep(prog, sub, val, backend, interpret)
+        state = _local_sweep(prog, sub, val, backend, interpret, block_e)
         iters = jnp.ones((p,), jnp.int32)
     if not do_exchange:  # bounded-staleness local step (straggler mitigation)
         return state, jnp.zeros((p,), jnp.int32), iters, jnp.float32(0.0)
@@ -633,11 +629,14 @@ def _sim_exchange(S: jax.Array) -> jax.Array:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("prog", "inner_cap", "do_exchange", "num_vertices", "backend")
+    jax.jit,
+    static_argnames=("prog", "inner_cap", "do_exchange", "num_vertices", "backend", "block_e"),
 )
-def _jit_superstep_sim(prog, sub, val, inner_cap, do_exchange, count_ref, num_vertices=0, backend="xla"):
+def _jit_superstep_sim(prog, sub, val, inner_cap, do_exchange, count_ref, num_vertices=0,
+                       backend="xla", block_e=512):
     return _superstep(
-        prog, sub, val, _sim_exchange, inner_cap, do_exchange, count_ref, num_vertices, backend
+        prog, sub, val, _sim_exchange, inner_cap, do_exchange, count_ref, num_vertices, backend,
+        block_e=block_e,
     )
 
 
@@ -655,11 +654,22 @@ def _jit_superstep_sim(prog, sub, val, inner_cap, do_exchange, count_ref, num_ve
 @functools.partial(
     jax.jit,
     static_argnames=("prog", "max_supersteps", "inner_cap", "exchange_period", "tol",
-                     "num_vertices", "backend"),
+                     "num_vertices", "backend", "block_e"),
     donate_argnums=(1,),
 )
 def _fused_bsp(sub, val, *, prog, max_supersteps, inner_cap, exchange_period, tol,
-               num_vertices, backend):
+               num_vertices, backend, block_e=512):
+    # Kernel backends run int32 programs in f32. Hoist the INF_I32 <->
+    # INF_F32 remap OUT of the superstep loop: remap once here, run the
+    # whole loop on an f32 exec view of the program, remap once on exit.
+    # The remap is a bijection on every occurring value, so values, message
+    # counts, and convergence are bit-identical to the in-loop remap (and
+    # the host driver, which still pays it per superstep in
+    # `_local_fixpoint`). Pinned by test_fused_no_inloop_remap.
+    to_f32 = backend != "xla" and prog.dtype == "int32"
+    if to_f32:
+        val = jnp.where(val == INF_I32, INF_F32, val.astype(jnp.float32))
+        prog = dataclasses.replace(prog, dtype="float32")
     p = val.shape[0]
     msgs_buf = jnp.zeros((max_supersteps, p), jnp.int32)
     iters_buf = jnp.zeros((max_supersteps, p), jnp.int32)
@@ -681,7 +691,8 @@ def _fused_bsp(sub, val, *, prog, max_supersteps, inner_cap, exchange_period, to
             # Static specialization of the common case: every step exchanges,
             # so the trace needs no branch or last-exchange select.
             v2, msgs, iters, delta = _superstep(
-                prog, sub, v, _sim_exchange, inner_cap, True, last_ex, num_vertices, backend
+                prog, sub, v, _sim_exchange, inner_cap, True, last_ex, num_vertices, backend,
+                block_e=block_e,
             )
             converged = converged_flag(v, v2, jnp.bool_(True), delta)
             last_ex = v2
@@ -690,10 +701,12 @@ def _fused_bsp(sub, val, *, prog, max_supersteps, inner_cap, exchange_period, to
             v2, msgs, iters, delta = jax.lax.cond(
                 do_ex,
                 lambda v_, le: _superstep(
-                    prog, sub, v_, _sim_exchange, inner_cap, True, le, num_vertices, backend
+                    prog, sub, v_, _sim_exchange, inner_cap, True, le, num_vertices, backend,
+                    block_e=block_e,
                 ),
                 lambda v_, le: _superstep(
-                    prog, sub, v_, _sim_exchange, inner_cap, False, le, num_vertices, backend
+                    prog, sub, v_, _sim_exchange, inner_cap, False, le, num_vertices, backend,
+                    block_e=block_e,
                 ),
                 v, last_ex,
             )
@@ -703,6 +716,8 @@ def _fused_bsp(sub, val, *, prog, max_supersteps, inner_cap, exchange_period, to
 
     carry = (val, val, jnp.int32(0), jnp.bool_(False), msgs_buf, iters_buf)
     val, _, steps, converged, msgs_buf, iters_buf = jax.lax.while_loop(cond, body, carry)
+    if to_f32:
+        val = jnp.where(val >= INF_F32, INF_I32, val.astype(jnp.int32))
     # Edge counts ride along so the stats assembly needs no extra dispatch.
     # The converged flag disambiguates "fixpoint reached on the last step"
     # from "step budget exhausted" — the checkpointed segment driver in
@@ -748,6 +763,7 @@ def run_bsp(
     source=None,
     compute_backend: str = "xla",
     driver: str = "fused",
+    block_e: int = 512,
     checkpoint_every: Optional[int] = None,
     ckpt_dir=None,
     fault_plan=None,
@@ -776,7 +792,10 @@ def run_bsp(
     superstep per Python iteration (identical values and stats —
     tests/test_drivers.py pins the equivalence). `tol` is the L1 step-delta
     convergence threshold for convergence='tol' programs (0 = run all
-    max_supersteps, PageRank's fixed-iteration mode).
+    max_supersteps, PageRank's fixed-iteration mode). `block_e` is the
+    megakernel's edge-block size for kernel backends (VMEM streaming
+    granularity — see docs/api.md "Performance guide"; ignored by "xla";
+    values are bit-identical across block_e choices).
 
     driver="fused" DONATES the initial value buffer to the device program
     (that is where the fused loop's zero-copy value carry starts): on
@@ -793,6 +812,7 @@ def run_bsp(
             max_supersteps=max_supersteps, inner_cap=inner_cap,
             exchange_period=exchange_period, tol=tol, num_vertices=num_vertices,
             source=source, compute_backend=compute_backend, driver=driver,
+            block_e=block_e,
             checkpoint_every=checkpoint_every, ckpt_dir=ckpt_dir, fault_plan=fault_plan,
         )
     prog = get_program(program)
@@ -825,6 +845,7 @@ def run_bsp(
             tol=tol,
             num_vertices=num_vertices,
             backend=compute_backend,
+            block_e=block_e,
         )
         DISPATCH_COUNTS["fused"] += 1
         # The run's single host sync: one device_get for every stat buffer.
@@ -847,7 +868,7 @@ def run_bsp(
         before = val
         val, msgs, iters, delta = _jit_superstep_sim(
             exec_prog, sub, val, inner_cap, do_exchange, last_exchanged,
-            num_vertices, compute_backend,
+            num_vertices, compute_backend, block_e,
         )
         DISPATCH_COUNTS["host"] += 1
         if do_exchange:
@@ -880,10 +901,18 @@ def run_bsp(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("prog", "max_supersteps", "inner_cap", "tol", "num_vertices", "backend"),
+    static_argnames=("prog", "max_supersteps", "inner_cap", "tol", "num_vertices", "backend",
+                     "block_e"),
     donate_argnums=(1,),
 )
-def _fused_bsp_batch(sub, vals, *, prog, max_supersteps, inner_cap, tol, num_vertices, backend):
+def _fused_bsp_batch(sub, vals, *, prog, max_supersteps, inner_cap, tol, num_vertices, backend,
+                     block_e=512):
+    # Same run-boundary hoist of the kernel path's int32<->f32 remap as
+    # `_fused_bsp` (bijective, so per-query values/stats are unchanged).
+    to_f32 = backend != "xla" and prog.dtype == "int32"
+    if to_f32:
+        vals = jnp.where(vals == INF_I32, INF_F32, vals.astype(jnp.float32))
+        prog = dataclasses.replace(prog, dtype="float32")
     B = vals.shape[0]
     p = vals.shape[1]
     msgs_buf = jnp.zeros((max_supersteps, B, p), jnp.int32)
@@ -893,7 +922,8 @@ def _fused_bsp_batch(sub, vals, *, prog, max_supersteps, inner_cap, tol, num_ver
     # specialized period-1 branch of `_fused_bsp`.
     vstep = jax.vmap(
         lambda v: _superstep(
-            prog, sub, v, _sim_exchange, inner_cap, True, None, num_vertices, backend
+            prog, sub, v, _sim_exchange, inner_cap, True, None, num_vertices, backend,
+            block_e=block_e,
         )
     )
 
@@ -920,6 +950,8 @@ def _fused_bsp_batch(sub, vals, *, prog, max_supersteps, inner_cap, tol, num_ver
     carry = (vals, jnp.int32(0), jnp.zeros((B,), bool), jnp.zeros((B,), jnp.int32),
              msgs_buf, iters_buf)
     vals, _, _, steps_q, msgs_buf, iters_buf = jax.lax.while_loop(cond, body, carry)
+    if to_f32:
+        vals = jnp.where(vals >= INF_F32, INF_I32, vals.astype(jnp.int32))
     edges = jnp.sum(sub.edge_mask, axis=1, dtype=jnp.int32)
     return vals, steps_q, msgs_buf, iters_buf, edges
 
@@ -1001,6 +1033,7 @@ def run_bsp_batch(
     tol: float = 0.0,
     num_vertices: int = 0,
     compute_backend: str = "xla",
+    block_e: int = 512,
 ) -> tuple[jax.Array, list]:
     """Batched multi-source BSP: B queries of one program in ONE fused
     dispatch over shared subgraph structure.
@@ -1020,7 +1053,7 @@ def run_bsp_batch(
     vals = -init_vals if negate else init_vals
     vals, steps_q, msgs_buf, iters_buf, edges = _fused_bsp_batch(
         sub, vals, prog=exec_prog, max_supersteps=max_supersteps, inner_cap=inner_cap,
-        tol=tol, num_vertices=num_vertices, backend=compute_backend,
+        tol=tol, num_vertices=num_vertices, backend=compute_backend, block_e=block_e,
     )
     DISPATCH_COUNTS["batch"] += 1
     steps_q, msgs_sbw, iters_sbw, edges = jax.device_get((steps_q, msgs_buf, iters_buf, edges))
@@ -1073,6 +1106,7 @@ def compile_batch_executable(
     tol: float = 0.0,
     num_vertices: int = 0,
     compute_backend: str = "xla",
+    block_e: int = 512,
 ) -> BatchExecutable:
     """AOT-lower + compile the batched fused BSP loop for a fixed padded
     batch size (the warm path behind `repro.serve`'s executable cache)."""
@@ -1088,7 +1122,7 @@ def compile_batch_executable(
     t0 = time.perf_counter()
     compiled = _fused_bsp_batch.lower(
         sub, spec, prog=exec_prog, max_supersteps=max_supersteps, inner_cap=inner_cap,
-        tol=tol, num_vertices=num_vertices, backend=compute_backend,
+        tol=tol, num_vertices=num_vertices, backend=compute_backend, block_e=block_e,
     ).compile()
     return BatchExecutable(
         program=prog, sub=sub, batch=int(batch), negate=negate, compiled=compiled,
@@ -1125,6 +1159,7 @@ def make_distributed_stepper(
     tol: float = 0.0,
     num_vertices: int = 0,
     compute_backend: str = "xla",
+    block_e: int = 512,
     fault_plan=None,
 ):
     """Builds a shard_map'd BSP runner for ANY `VertexProgram`: subgraphs
@@ -1168,6 +1203,12 @@ def make_distributed_stepper(
         mesh_platform = None
     interpret = None if mesh_platform is None else mesh_platform != "tpu"
     exec_prog, negate = _exec_view(prog)
+    # Same run-boundary hoist as the fused sim drivers: kernel backends run
+    # int32 programs in f32, remapped once per run inside the shard_map'd
+    # loop (per shard), not once per superstep.
+    to_f32 = compute_backend != "xla" and prog.dtype == "int32"
+    if to_f32:
+        exec_prog = dataclasses.replace(exec_prog, dtype="float32")
     axis_tuple = axes if isinstance(axes, tuple) else (axes,)
     spec3 = P(axis_tuple, None, None)
     spec2 = P(axis_tuple, None)
@@ -1180,6 +1221,8 @@ def make_distributed_stepper(
 
     def stepper(arrays: dict, val: jax.Array):
         sub = SubgraphSet(**arrays, **statics)
+        if to_f32:
+            val = jnp.where(val == INF_I32, INF_F32, val.astype(jnp.float32))
         nloc = val.shape[0]  # subgraphs per device (1 on a fully sharded mesh)
         msgs_buf = jnp.zeros((num_supersteps, nloc), jnp.int32)
         iters_buf = jnp.zeros((num_supersteps, nloc), jnp.int32)
@@ -1193,6 +1236,7 @@ def make_distributed_stepper(
             v2, m, it, delta = _superstep(
                 exec_prog, sub, v, a2a_exchange, inner_cap,
                 num_vertices=num_vertices, backend=compute_backend, interpret=interpret,
+                block_e=block_e,
             )
             # Convergence is global: psum the per-device signal so every
             # device takes the same trip count (collectives stay uniform).
@@ -1207,6 +1251,8 @@ def make_distributed_stepper(
         val_out, steps, _, msgs_buf, iters_buf = jax.lax.while_loop(
             cond, body, (val, jnp.int32(0), jnp.bool_(False), msgs_buf, iters_buf)
         )
+        if to_f32:
+            val_out = jnp.where(val_out >= INF_F32, INF_I32, val_out.astype(jnp.int32))
         return val_out, msgs_buf.sum(axis=0), steps, msgs_buf, iters_buf
 
     sharded = shard_map_compat(

@@ -1,0 +1,235 @@
+"""Pallas TPU megakernel: one whole BSP local-compute stage per worker.
+
+The per-superstep hot loop of the subgraph-centric engine used to be a
+chain of separate XLA ops per relaxation pass — gather, segment-combine,
+elementwise min — each round-tripping the [p, max_v+1] value state through
+HBM, once per inner iteration per superstep. This kernel runs the ENTIRE
+local-compute stage of a superstep for one worker in a single launch:
+
+  - the worker's vertex values live in a VMEM accumulator for the whole
+    stage (EBG's vertex balance bounds max_v, i.e. this kernel's VMEM
+    footprint — the paper's balance objective is what makes the values
+    fit);
+  - CSR edge blocks (src, dst, weight) stream from HBM through
+    double-buffered VMEM DMA — block b+1's copy is in flight while block
+    b is reduced, so the edge stream never stalls the VPU;
+  - each block is rank-compressed (dst-sorted runs -> boundary cumsum)
+    and reduced with the same rank-onehot partial trick as
+    `segment_reduce`, committed into the VMEM accumulator;
+  - min-fixpoint programs (CC/SSSP/BFS/negated reach) iterate passes to
+    LOCAL convergence inside the kernel: the per-worker convergence flag
+    is fused (a VMEM compare of the pass's before/after values), and the
+    per-worker inner-iteration count is the kernel's second output;
+  - sweep programs (PageRank) fuse the out-degree share division
+    (`val/outdeg` at the gather) and run one accumulation pass.
+
+Values touch HBM exactly once per superstep: the initial DMA in (via the
+value BlockSpec) and the final write of the converged state. Grid = one
+step per worker; the sequential TPU grid keeps each worker's edge stream
+private to its accumulator.
+
+Bit-parity contract: identical values AND inner-iteration counts to the
+batched XLA while-loop in `repro.graph.engine._local_fixpoint` (the
+change-passes of a monotone relax form a prefix, so the per-worker loop
+here and the any-worker batched loop there agree on both values and
+iteration counts — pinned by tests/test_megakernel.py and the driver
+parity suites).
+
+Stream contract: min-fixpoint streams must be dst-sorted WITHIN each
+direction half (rank compression only needs within-block runs, so a
+concatenated fwd+reversed stream is fine); sum streams must be globally
+dst-sorted so the float accumulation order matches `segment_sum`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.dispatch import default_interpret
+
+INF = 3.0e38  # plain float: jnp constants would be captured by the kernel tracer
+
+
+def _bsp_superstep_kernel(
+    *refs, combine: str, block_e: int, nblk: int, inner_cap: int
+):
+    if combine == "sum":
+        (lsrc_hbm, ldst_hbm, w_hbm, deg_ref, val_ref,
+         out_ref, it_ref, prev, acc, ibuf, wbuf, isems, wsems) = refs
+    else:
+        (lsrc_hbm, ldst_hbm, w_hbm, val_ref,
+         out_ref, it_ref, prev, acc, ibuf, wbuf, isems, wsems) = refs
+    worker = pl.program_id(0)
+
+    if combine == "sum":
+        # Fused apply of the push-sum share: each vertex pushes
+        # val/outdeg along its out-edges (0 where outdeg == 0).
+        deg = deg_ref[...]
+        prev[...] = jnp.where(deg > 0, val_ref[...] / deg, 0.0)
+    else:
+        prev[...] = val_ref[...]
+
+    def edge_dmas(slot, b):
+        """The three async copies moving block b into buffer `slot`."""
+        sl = pl.ds(b * block_e, block_e)
+        return (
+            pltpu.make_async_copy(lsrc_hbm.at[worker, sl], ibuf.at[0, slot], isems.at[0, slot]),
+            pltpu.make_async_copy(ldst_hbm.at[worker, sl], ibuf.at[1, slot], isems.at[1, slot]),
+            pltpu.make_async_copy(w_hbm.at[worker, sl], wbuf.at[slot], wsems.at[slot]),
+        )
+
+    def one_pass():
+        """Stream every edge block through the double buffer, reducing
+        into `acc`. One pass = one relaxation (min) / the whole sweep (sum)."""
+        if combine == "sum":
+            acc[...] = jnp.zeros_like(acc)
+        else:
+            acc[...] = prev[...]  # min is seeded with the current values
+        for dma in edge_dmas(0, 0):  # warm-up: start block 0's copy
+            dma.start()
+
+        def block_body(b, carry):
+            slot = jax.lax.rem(b, 2)
+            next_slot = jax.lax.rem(b + 1, 2)
+
+            @pl.when(b + 1 < nblk)
+            def _prefetch():
+                for dma in edge_dmas(next_slot, b + 1):
+                    dma.start()
+
+            for dma in edge_dmas(slot, b):
+                dma.wait()
+            lsrc = ibuf[0, slot]
+            ldst = ibuf[1, slot]
+            w = wbuf[slot]
+
+            gathered = prev[0, lsrc]
+            if combine == "sum":
+                # Sequential index-order adds: float sums must accumulate in
+                # exactly `segment_sum`'s order for bitwise parity with the
+                # XLA sweep — a rank-onehot partial would re-associate.
+                contrib = jnp.where(w != 0.0, gathered * w, 0.0)
+
+                def commit_edge(j, c):
+                    d = ldst[j]
+                    cur = pl.load(acc, (pl.dslice(0, 1), pl.dslice(d, 1)))
+                    pl.store(acc, (pl.dslice(0, 1), pl.dslice(d, 1)), cur + contrib[j])
+                    return c
+
+                jax.lax.fori_loop(0, block_e, commit_edge, 0)
+                return carry
+
+            # Padded edges carry w = INF (the min identity) and must
+            # absorb the gather, exactly as the ref oracle's mask.
+            contrib = jnp.where(w < INF, gathered + w, INF)
+
+            # Rank-compress equal-dst runs (dst-sorted within the block).
+            boundary = jnp.concatenate(
+                [jnp.ones((1,), jnp.int32), (ldst[1:] != ldst[:-1]).astype(jnp.int32)]
+            )
+            rank = jnp.cumsum(boundary) - 1
+            ranks = jax.lax.broadcasted_iota(jnp.int32, (block_e, block_e), 0)
+            hit = ranks == rank[None, :]
+            partial = jnp.min(jnp.where(hit, contrib[None, :], INF), axis=1)
+            iota_e = jax.lax.broadcasted_iota(jnp.int32, (block_e, block_e), 1)
+            run_start = jnp.min(jnp.where(hit, iota_e, block_e - 1), axis=1)
+            dst_of_rank = ldst[run_start]
+            nruns = rank[-1] + 1
+
+            def commit(r, c):
+                d = dst_of_rank[r]
+                cur = pl.load(acc, (pl.dslice(0, 1), pl.dslice(d, 1)))
+                pl.store(acc, (pl.dslice(0, 1), pl.dslice(d, 1)), jnp.minimum(cur, partial[r]))
+                return c
+
+            jax.lax.fori_loop(0, nruns, commit, 0)
+            return carry
+
+        jax.lax.fori_loop(0, nblk, block_body, 0)
+
+    if combine == "sum":
+        one_pass()
+        out_ref[...] = acc[...]
+        it_ref[0] = jnp.int32(1)
+    else:
+        # Per-worker fixpoint: iterate passes until a pass changes nothing
+        # (fused convergence flag) or the inner cap hits. Identical values
+        # and counts to the batched driver loop: change-passes of the
+        # monotone relax form a prefix, so iters = min(#changing, cap).
+        def cond(carry):
+            changed, it = carry
+            return changed & (it < inner_cap)
+
+        def body(carry):
+            _, it = carry
+            one_pass()
+            changed = jnp.any(acc[...] != prev[...])
+            prev[...] = acc[...]
+            return changed, it + jnp.where(changed, 1, 0)
+
+        _, iters = jax.lax.while_loop(cond, body, (jnp.bool_(True), jnp.int32(0)))
+        out_ref[...] = prev[...]
+        it_ref[0] = iters
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_out", "combine", "inner_cap", "block_e", "interpret")
+)
+def bsp_superstep_pallas(
+    lsrc: jax.Array,  # [p, E] int32, E % block_e == 0
+    ldst: jax.Array,  # [p, E] int32, dst-sorted within blocks (see module doc)
+    weight: jax.Array,  # [p, E] f32; pads carry INF (min) / 0 (sum)
+    val: jax.Array,  # [p, num_out] f32
+    out_degree: jax.Array | None = None,  # [p, num_out] f32, combine="sum" only
+    *,
+    num_out: int,
+    combine: str = "min",
+    inner_cap: int = 1,
+    block_e: int = 512,
+    interpret: bool | None = None,
+):
+    """Whole-local-stage BSP superstep: returns (new_val [p, num_out] f32,
+    inner iteration counts [p] int32)."""
+    interpret = default_interpret(interpret)
+    p, E = lsrc.shape
+    assert E % block_e == 0, "pad edge streams to a multiple of block_e"
+    assert val.shape == (p, num_out)
+    nblk = E // block_e
+    hbm = pl.BlockSpec(memory_space=pltpu.ANY)
+    per_worker = pl.BlockSpec((1, num_out), lambda i: (i, 0))
+    in_specs = [hbm, hbm, hbm]
+    args = [lsrc, ldst, weight]
+    if combine == "sum":
+        if out_degree is None:
+            raise ValueError("combine='sum' needs out_degree")
+        in_specs.append(per_worker)
+        args.append(out_degree)
+    in_specs.append(per_worker)
+    args.append(val)
+    out, iters = pl.pallas_call(
+        functools.partial(
+            _bsp_superstep_kernel,
+            combine=combine, block_e=block_e, nblk=nblk, inner_cap=inner_cap,
+        ),
+        grid=(p,),
+        in_specs=in_specs,
+        out_specs=[per_worker, pl.BlockSpec((1,), lambda i: (i,))],
+        out_shape=[
+            jax.ShapeDtypeStruct((p, num_out), jnp.float32),
+            jax.ShapeDtypeStruct((p,), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, num_out), jnp.float32),  # prev (values / shares)
+            pltpu.VMEM((1, num_out), jnp.float32),  # acc
+            pltpu.VMEM((2, 2, block_e), jnp.int32),  # double-buffered src/dst
+            pltpu.VMEM((2, block_e), jnp.float32),  # double-buffered weights
+            pltpu.SemaphoreType.DMA((2, 2)),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+        interpret=interpret,
+    )(*args)
+    return out, iters

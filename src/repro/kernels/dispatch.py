@@ -5,10 +5,35 @@
 on TPU gets the compiled kernel — the same default a call routed through
 `repro.kernels.ops` would get — instead of silently running the
 interpreter.
+
+The sniff itself (`jax.default_backend()`, which walks `jax.devices()`)
+is paid ONCE per process and cached: per-block kernel launches resolve
+`interpret=None` on every call, and the probe is pure overhead after the
+first. `set_platform_is_tpu` is the test seam — pass True/False to force
+a platform, None to drop the cache and re-sniff.
 """
 from __future__ import annotations
 
 import jax
+
+# None = not sniffed yet; True/False = cached (or test-forced) answer.
+_PLATFORM_IS_TPU: bool | None = None
+
+
+def platform_is_tpu() -> bool:
+    """Cached once-per-process `jax.default_backend() == "tpu"` probe."""
+    global _PLATFORM_IS_TPU
+    if _PLATFORM_IS_TPU is None:
+        _PLATFORM_IS_TPU = jax.default_backend() == "tpu"
+    return _PLATFORM_IS_TPU
+
+
+def set_platform_is_tpu(is_tpu: bool | None) -> None:
+    """Test-visible override: True/False force the platform answer for
+    subsequent `default_interpret(None)` resolutions; None clears the
+    cache so the next call re-sniffs the real backend."""
+    global _PLATFORM_IS_TPU
+    _PLATFORM_IS_TPU = None if is_tpu is None else bool(is_tpu)
 
 
 def default_interpret(interpret: bool | None = None) -> bool:
@@ -18,5 +43,5 @@ def default_interpret(interpret: bool | None = None) -> bool:
     forceable off-TPU, the interpreter on TPU).
     """
     if interpret is None:
-        return jax.default_backend() != "tpu"
+        return not platform_is_tpu()
     return bool(interpret)

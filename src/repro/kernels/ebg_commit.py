@@ -19,6 +19,13 @@ to the unfused path (`repro.kernels.ref.ebg_commit_block_ref`): membership
 is pinned to the block-start bitset, so the in-loop bit commits never feed
 back into this block's scores.
 
+`window=True` turns the frozen commit into the speculative window commit:
+scoring is still vectorized against block-start membership, but each
+committed edge clears the now-stale membership columns of LATER in-block
+edges that share one of its endpoints, so only conflicted edges replay
+against corrected state — assignments become bit-identical to the
+one-edge-at-a-time scan driver at any block size.
+
 The scorer's coefficients ride in as a (5,) f32 vector — ce (edge-balance
 coefficient: EBV alpha / HDRF lambda), cv (vertex-balance: EBV beta),
 inv_e, inv_v (the static normalizers), eps (the range normalizer's
@@ -41,7 +48,8 @@ from repro.kernels.dispatch import default_interpret
 
 def _ebg_commit_kernel(
     u_ref, v_ref, valid_ref, wu_ref, wv_ref, coef_ref, keep_in_ref, e_in_ref, v_in_ref,
-    keep_ref, e_ref, vc_ref, parts_ref, *, num_parts: int, balance: str, weighted: bool
+    keep_ref, e_ref, vc_ref, parts_ref, *, num_parts: int, balance: str, weighted: bool,
+    window: bool = False,
 ):
     u = u_ref[...]
     v = v_ref[...]
@@ -55,26 +63,25 @@ def _ebg_commit_kernel(
         bits = (words >> (ids & 31).astype(jnp.uint32)) & jnp.uint32(1)
         return (jnp.uint32(1) - bits).astype(jnp.float32)
 
-    mu = miss(u)
-    mv = miss(v)
-    memb = mu + mv  # [p, B]
-    if weighted:
-        wmemb = wu_ref[...][None, :] * mu + wv_ref[...][None, :] * mv
-    else:
-        wmemb = memb
+    mu0 = miss(u)
+    mv0 = miss(v)
     keep_ref[...] = keep  # commit loop mutates the output copy in place
 
     def body(j, carry):
-        e_c, v_c = carry
+        e_c, v_c, mu, mv = carry
         if balance == "static":
             norm = inv_e
         else:
             norm = 1.0 / (eps + (jnp.max(e_c) - jnp.min(e_c)))
-        score = wmemb[:, j] + ce * e_c * norm + cv * v_c * inv_v
+        if weighted:
+            gain = wu_ref[j] * mu[:, j] + wv_ref[j] * mv[:, j]
+        else:
+            gain = mu[:, j] + mv[:, j]
+        score = gain + ce * e_c * norm + cv * v_c * inv_v
         i = jnp.argmin(score).astype(jnp.int32)  # ties -> lowest subgraph id
         live = valid[j].astype(jnp.float32)
         e_c = e_c.at[i].add(live)
-        v_c = v_c.at[i].add(live * memb[i, j])
+        v_c = v_c.at[i].add(live * (mu[i, j] + mv[i, j]))
         pl.store(
             parts_ref,
             (pl.dslice(j, 1),),
@@ -93,14 +100,27 @@ def _ebg_commit_kernel(
             cur_v = pl.load(keep_ref, (pl.dslice(i, 1), pl.dslice(wv, 1)))
             pl.store(keep_ref, (pl.dslice(i, 1), pl.dslice(wv, 1)), cur_v | bv)
 
-        return e_c, v_c
+        if window:
+            # Speculative window commit: the block was scored from frozen
+            # state; replay this commit's membership consequences onto the
+            # remaining columns (clear the winner's miss rows wherever a
+            # later edge touches the committed endpoints) so conflicted
+            # edges score against live state — bit-identical to the scan.
+            hit_u = (u == u[j]) | (u == v[j])
+            hit_v = (v == u[j]) | (v == v[j])
+            gate = valid[j] != 0
+            mu = mu.at[i].set(jnp.where(hit_u & gate, 0.0, mu[i]))
+            mv = mv.at[i].set(jnp.where(hit_v & gate, 0.0, mv[i]))
+        return e_c, v_c, mu, mv
 
-    e_c, v_c = jax.lax.fori_loop(0, u.shape[0], body, (e_in_ref[...], v_in_ref[...]))
+    e_c, v_c, _, _ = jax.lax.fori_loop(
+        0, u.shape[0], body, (e_in_ref[...], v_in_ref[...], mu0, mv0)
+    )
     e_ref[...] = e_c
     vc_ref[...] = v_c
 
 
-@functools.partial(jax.jit, static_argnames=("balance", "weighted", "interpret"))
+@functools.partial(jax.jit, static_argnames=("balance", "weighted", "window", "interpret"))
 def ebg_commit_block_pallas(
     keep_bits: jax.Array,  # [p, Vw] uint32
     e_count: jax.Array,  # [p] f32
@@ -114,6 +134,7 @@ def ebg_commit_block_pallas(
     *,
     balance: str = "static",
     weighted: bool = False,
+    window: bool = False,
     interpret: bool | None = None,
 ):
     interpret = default_interpret(interpret)
@@ -121,7 +142,8 @@ def ebg_commit_block_pallas(
     B = u.shape[0]
     keep_out, e_out, v_out, parts = pl.pallas_call(
         functools.partial(
-            _ebg_commit_kernel, num_parts=p, balance=balance, weighted=weighted
+            _ebg_commit_kernel, num_parts=p, balance=balance, weighted=weighted,
+            window=window,
         ),
         out_shape=(
             jax.ShapeDtypeStruct((p, vw), jnp.uint32),

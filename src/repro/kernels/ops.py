@@ -19,8 +19,9 @@ import jax.numpy as jnp
 
 from repro.api.config import COMPUTE_BACKENDS, check_compute_backend  # noqa: F401  (re-exported seam)
 from repro.kernels import ref
+from repro.kernels.bsp_superstep import bsp_superstep_pallas
 from repro.kernels.decode_attn import decode_attention_pallas
-from repro.kernels.dispatch import default_interpret
+from repro.kernels.dispatch import default_interpret, platform_is_tpu
 from repro.kernels.ebg_commit import ebg_commit_block_pallas
 from repro.kernels.ebg_score import ebg_membership_pallas
 from repro.kernels.segment_reduce import segment_reduce_pallas
@@ -29,7 +30,7 @@ IMPLS = ("ref", "pallas")
 
 
 def _default_impl() -> str:
-    return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return "pallas" if platform_is_tpu() else "ref"
 
 
 def _resolve_impl(impl: str | None, interpret: bool | None) -> tuple[str, bool]:
@@ -118,6 +119,63 @@ def segment_max(
     )
 
 
+def bsp_superstep(
+    lsrc, ldst, weight, val, *, num_out: int, combine: str = "min",
+    inner_cap: int = 1, out_degree=None,
+    impl: str | None = None, block_e: int = 512, interpret: bool | None = None,
+):
+    """Whole-local-stage BSP superstep for a batch of workers (the engine's
+    megakernel entry): lsrc/ldst/weight are [p, E] edge streams, val is the
+    [p, num_out] f32 value state.
+
+    combine="min" iterates the min-plus relaxation to local convergence
+    (capped at `inner_cap`) — padded edges must carry weight=INF (the min
+    identity); the stream may concatenate direction halves, each
+    dst-sorted. combine="max" runs on the same machinery via negation
+    (`weight` is the pad carrier only: real edges hold 0, pads INF).
+    combine="sum" is one out-degree-normalized push-sum sweep
+    (`out_degree`: [p, num_out] f32; the share division is fused) —
+    padded edges carry weight=0 and the stream must be globally
+    dst-sorted (float accumulation order).
+
+    Returns (new_val [p, num_out] f32, per-worker inner iteration counts
+    [p] int32) — bit-identical values and counts to the engine's batched
+    XLA path across impls (the driver/backend/program parity suites pin
+    this).
+    """
+    impl, interpret = _resolve_impl(impl, interpret)
+    if combine not in ("min", "max", "sum"):
+        raise ValueError(f"combine must be 'min', 'max' or 'sum', got {combine!r}")
+    if combine == "max":
+        out, iters = bsp_superstep(
+            lsrc, ldst, weight, -val, num_out=num_out, combine="min",
+            inner_cap=inner_cap, impl=impl, block_e=block_e, interpret=interpret,
+        )
+        return -out, iters
+    if (combine == "sum") != (out_degree is not None):
+        raise ValueError("out_degree is required for combine='sum' and only then")
+    if impl == "ref":
+        return ref.bsp_superstep_ref(
+            lsrc, ldst, weight, val, num_out,
+            combine=combine, inner_cap=inner_cap, out_degree=out_degree,
+        )
+    # Batched twin of _pad_to_block: pad every worker's stream to a
+    # multiple of block_e with identity-weight no-op edges at the dump slot.
+    p, E = lsrc.shape
+    block_e = max(min(block_e, E), 1)
+    pad = (-E) % block_e
+    if pad:
+        identity = 0.0 if combine == "sum" else float(ref.INF)
+        lsrc = jnp.concatenate([lsrc, jnp.zeros((p, pad), lsrc.dtype)], axis=1)
+        ldst = jnp.concatenate([ldst, jnp.full((p, pad), num_out - 1, ldst.dtype)], axis=1)
+        weight = jnp.concatenate([weight, jnp.full((p, pad), identity, weight.dtype)], axis=1)
+    return bsp_superstep_pallas(
+        lsrc, ldst, weight, val, out_degree,
+        num_out=num_out, combine=combine, inner_cap=inner_cap,
+        block_e=block_e, interpret=interpret,
+    )
+
+
 def ebg_membership(
     keep_bits, u, v, *, impl: str | None = None, block_e: int = 512, interpret: bool | None = None,
 ):
@@ -138,7 +196,7 @@ def ebg_membership(
 def ebg_commit_block(
     keep_bits, e_count, v_count, u, v, valid, *,
     alpha, beta, inv_e, inv_v, eps=1.0, balance: str = "static",
-    wu=None, wv=None,
+    wu=None, wv=None, window: bool = False,
     impl: str | None = None, interpret: bool | None = None,
 ):
     """Fused streaming-scorer block commit: membership score + argmin +
@@ -154,9 +212,13 @@ def ebg_commit_block(
     per edge (HDRF's 2−θ degree streams). All coefficients may be traced
     scalars (inv_e depends on the real edge count). Pad edges carry
     valid=False: they are scored (uniform lane work) but never committed,
-    and their assignment is the out-of-bounds row p. Returns (keep_bits,
-    e_count, v_count, parts) — assignments bit-identical across impls and
-    to the dense-membership XLA path.
+    and their assignment is the out-of-bounds row p. `window=True` turns
+    the frozen-membership commit into the speculative window commit:
+    scores stay vectorized against block-start state, but each commit
+    replays its membership consequences onto later conflicted columns —
+    assignments bit-identical to the one-edge-at-a-time scan driver.
+    Returns (keep_bits, e_count, v_count, parts) — assignments
+    bit-identical across impls and to the dense-membership XLA path.
     """
     impl, interpret = _resolve_impl(impl, interpret)
     if balance not in ("static", "range"):
@@ -167,7 +229,7 @@ def ebg_commit_block(
         return ref.ebg_commit_block_ref(
             keep_bits, e_count, v_count, u, v, valid,
             alpha=alpha, beta=beta, inv_e=inv_e, inv_v=inv_v,
-            eps=eps, balance=balance, wu=wu, wv=wv,
+            eps=eps, balance=balance, wu=wu, wv=wv, window=window,
         )
     coef = jnp.stack([
         jnp.float32(alpha), jnp.float32(beta), jnp.float32(inv_e),
@@ -178,7 +240,7 @@ def ebg_commit_block(
         wu = wv = jnp.zeros(u.shape, jnp.float32)
     return ebg_commit_block_pallas(
         keep_bits, e_count, v_count, u, v, valid, wu, wv, coef,
-        balance=balance, weighted=weighted, interpret=interpret,
+        balance=balance, weighted=weighted, window=window, interpret=interpret,
     )
 
 

@@ -26,6 +26,65 @@ def segment_sum_ref(lsrc, ldst, contrib_scale, mask, val, num_out):
     return jax.ops.segment_sum(data, ldst, num_segments=num_out, indices_are_sorted=True)
 
 
+def bsp_superstep_ref(
+    lsrc, ldst, weight, val, num_out, *, combine="min", inner_cap=1, out_degree=None
+):
+    """Batched whole-local-stage BSP superstep oracle (see
+    repro.kernels.bsp_superstep for the Pallas twin).
+
+    lsrc/ldst: [p, E] int32; weight: [p, E] f32 (pads carry INF for min,
+    0 for sum); val: [p, num_out] f32. combine="min" iterates the min-plus
+    relaxation to local convergence (or `inner_cap`), with the batched
+    any-worker loop the engine's XLA path runs — bit-identical values and
+    per-worker iteration counts. combine="sum" is one out-degree-normalized
+    push-sum sweep (`out_degree`: [p, num_out] f32) — the share division is
+    fused, matching the engine's sweep term for term.
+
+    Returns (new_val [p, num_out] f32, inner iteration counts [p] int32).
+    min streams may concatenate direction halves (each half dst-sorted);
+    sum streams must be globally dst-sorted (float accumulation order).
+    """
+    p = val.shape[0]
+    if combine == "sum":
+        share = jnp.where(out_degree > 0, val / out_degree, 0.0)
+        data = jnp.take_along_axis(share, lsrc, axis=1) * weight
+        data = jnp.where(weight != 0.0, data, 0.0)
+        new = jax.vmap(
+            lambda d, s: jax.ops.segment_sum(
+                d, s, num_segments=num_out, indices_are_sorted=True
+            )
+        )(data, ldst)
+        return new, jnp.ones((p,), jnp.int32)
+    if combine == "max":
+        out, iters = bsp_superstep_ref(
+            lsrc, ldst, weight, -val, num_out, combine="min", inner_cap=inner_cap
+        )
+        return -out, iters
+    mask = weight < INF
+
+    def relax(v):
+        data = jnp.take_along_axis(v, lsrc, axis=1) + weight
+        data = jnp.where(mask, data, INF)
+        # indices_are_sorted=False: the stream may concatenate direction
+        # halves, so ldst is only sorted per half — min is order-invariant.
+        cand = jax.vmap(
+            lambda d, s: jax.ops.segment_min(d, s, num_segments=num_out)
+        )(data, ldst)
+        return jnp.minimum(v, cand)
+
+    def body(carry):
+        v, ch, it, iters = carry
+        new = relax(v)
+        ch = jnp.any(new != v, axis=1)  # per worker
+        return new, ch, it + 1, iters + ch.astype(jnp.int32)
+
+    carry = (val, jnp.ones((p,), bool), jnp.int32(0), jnp.zeros((p,), jnp.int32))
+    carry = jax.lax.while_loop(
+        lambda c: jnp.any(c[1]) & (c[2] < inner_cap), body, carry
+    )
+    return carry[0], carry[3]
+
+
 def _miss_ref(keep_bits, ids):
     """[B] vertex ids -> [p, B] f32: 1 where the id is absent from keep[i]."""
     word = keep_bits[:, ids >> 5]
@@ -44,6 +103,7 @@ def ebg_membership_ref(keep_bits, u, v):
 def ebg_commit_block_ref(
     keep_bits, e_count, v_count, u, v, valid, *,
     alpha, beta, inv_e, inv_v, eps=1.0, balance="static", wu=None, wv=None,
+    window=False,
 ):
     """Fused streaming-scorer block commit: score + argmin + balance commit
     + bitset update, parameterized by the scorer's coefficient vector.
@@ -54,44 +114,59 @@ def ebg_commit_block_ref(
     uses 1/(eps + max(e_count) − min(e_count)). wu/wv, when given, weight
     the membership term per edge (HDRF's 2−θ degree term).
 
-    Membership is evaluated against the BLOCK-START bitset (same staleness
-    contract as the chunked scorer); the balance terms are committed exactly
-    and sequentially within the block. Invalid (pad) edges are scored but
-    never committed — their assignment is the out-of-bounds row p, dropped
-    by the bit scatter. Arithmetic is term-for-term the per-edge loop the
-    chunked partitioner ran in-engine before this op existed, so the
-    assignments are bit-identical.
+    window=False (frozen commit): membership is evaluated against the
+    BLOCK-START bitset (same staleness contract as the chunked scorer);
+    the balance terms are committed exactly and sequentially within the
+    block. window=True (speculative window commit): the whole block is
+    still scored from block-start state in one vectorized shot, but each
+    commit replays its membership consequences onto the remaining block
+    columns — the winner's miss rows are cleared wherever a later edge
+    touches the committed endpoints — so only conflicted edges see
+    corrected columns and the assignments are bit-identical to the
+    one-edge-at-a-time scan driver.
+
+    Invalid (pad) edges are scored but never committed — their assignment
+    is the out-of-bounds row p, dropped by the bit scatter (and, under
+    window, they clear nothing). Arithmetic is term-for-term the per-edge
+    loop the chunked partitioner ran in-engine before this op existed, so
+    the assignments are bit-identical.
 
     Returns (keep_bits, e_count, v_count, parts).
     """
     p = keep_bits.shape[0]
-    mu = _miss_ref(keep_bits, u)  # [p, B] against block-start keep
-    mv = _miss_ref(keep_bits, v)
-    memb = mu + mv
-    wmemb = wu[None, :] * mu + wv[None, :] * mv if wu is not None else memb
+    mu0 = _miss_ref(keep_bits, u)  # [p, B] against block-start keep
+    mv0 = _miss_ref(keep_bits, v)
 
     def body(j, carry):
-        e_c, v_c, kb, parts = carry
+        e_c, v_c, kb, mu, mv, parts = carry
         if balance == "static":
             norm = inv_e
         else:
             norm = 1.0 / (eps + (jnp.max(e_c) - jnp.min(e_c)))
-        score = wmemb[:, j] + alpha * e_c * norm + beta * v_c * inv_v
+        gain = wu[j] * mu[:, j] + wv[j] * mv[:, j] if wu is not None else mu[:, j] + mv[:, j]
+        score = gain + alpha * e_c * norm + beta * v_c * inv_v
         i = jnp.argmin(score).astype(jnp.int32)
         live = valid[j].astype(jnp.float32)
         e_c = e_c.at[i].add(live)
-        v_c = v_c.at[i].add(live * memb[i, j])
+        v_c = v_c.at[i].add(live * (mu[i, j] + mv[i, j]))
         row = jnp.where(valid[j], i, p)
         uu, vv = u[j], v[j]
         bit_u = jnp.uint32(1) << (uu & 31).astype(jnp.uint32)
         kb = kb.at[row, uu >> 5].set(kb[i, uu >> 5] | bit_u, mode="drop")
         bit_v = jnp.uint32(1) << (vv & 31).astype(jnp.uint32)
         kb = kb.at[row, vv >> 5].set(kb[i, vv >> 5] | bit_v, mode="drop")
-        return e_c, v_c, kb, parts.at[j].set(row)
+        if window:
+            # Conflict replay: endpoints {u_j, v_j} now live in part i, so
+            # any remaining column touching them must stop scoring a miss.
+            hit_u = (u == uu) | (u == vv)
+            hit_v = (v == uu) | (v == vv)
+            mu = mu.at[i].set(jnp.where(hit_u & valid[j], 0.0, mu[i]))
+            mv = mv.at[i].set(jnp.where(hit_v & valid[j], 0.0, mv[i]))
+        return e_c, v_c, kb, mu, mv, parts.at[j].set(row)
 
-    e_count, v_count, keep_bits, parts = jax.lax.fori_loop(
+    e_count, v_count, keep_bits, _, _, parts = jax.lax.fori_loop(
         0, u.shape[0], body,
-        (e_count, v_count, keep_bits, jnp.zeros(u.shape, jnp.int32)),
+        (e_count, v_count, keep_bits, mu0, mv0, jnp.zeros(u.shape, jnp.int32)),
     )
     return keep_bits, e_count, v_count, parts
 

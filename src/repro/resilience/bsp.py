@@ -91,14 +91,15 @@ def _write_meta(ckpt_dir, sub, prog, knobs: dict) -> None:
 
 
 def _run_fused_segment(sub, exec_prog, state: _SegState, seg: int, *, inner_cap,
-                       exchange_period, tol, num_vertices, compute_backend) -> None:
+                       exchange_period, tol, num_vertices, compute_backend,
+                       block_e=512) -> None:
     # _fused_bsp donates its value arg: feed it a fresh device buffer per
     # segment (the host copy in `state` is the one we keep).
     val_dev = jnp.asarray(np.ascontiguousarray(state.val))
     val, steps, converged, msgs_buf, iters_buf, _ = engine._fused_bsp(
         sub, val_dev, prog=exec_prog, max_supersteps=seg, inner_cap=inner_cap,
         exchange_period=exchange_period, tol=tol, num_vertices=num_vertices,
-        backend=compute_backend,
+        backend=compute_backend, block_e=block_e,
     )
     engine.DISPATCH_COUNTS["fused"] += 1
     val, steps, converged, msgs_sw, iters_sw = jax.device_get(
@@ -113,7 +114,8 @@ def _run_fused_segment(sub, exec_prog, state: _SegState, seg: int, *, inner_cap,
 
 
 def _run_host_segment(sub, exec_prog, state: _SegState, seg: int, *, inner_cap,
-                      exchange_period, tol, num_vertices, compute_backend) -> None:
+                      exchange_period, tol, num_vertices, compute_backend,
+                      block_e=512) -> None:
     val = jnp.asarray(state.val)
     # Segment boundaries are exchange-period boundaries, so the value IS
     # the last-exchanged snapshot the delta counter references.
@@ -124,7 +126,7 @@ def _run_host_segment(sub, exec_prog, state: _SegState, seg: int, *, inner_cap,
         before = val
         val, msgs, iters, delta = engine._jit_superstep_sim(
             exec_prog, sub, val, inner_cap, do_exchange, last_ex,
-            num_vertices, compute_backend,
+            num_vertices, compute_backend, block_e,
         )
         engine.DISPATCH_COUNTS["host"] += 1
         if do_exchange:
@@ -147,7 +149,7 @@ def _run_host_segment(sub, exec_prog, state: _SegState, seg: int, *, inner_cap,
 
 def _run_segments(sub, exec_prog, negate, state: _SegState, *, max_supersteps,
                   inner_cap, exchange_period, tol, num_vertices, compute_backend,
-                  driver, checkpoint_every, ckpt_dir, fault_plan):
+                  driver, checkpoint_every, ckpt_dir, fault_plan, block_e=512):
     p = state.val.shape[0]
     run_seg = _run_fused_segment if driver == "fused" else _run_host_segment
     crash_at = None
@@ -170,7 +172,7 @@ def _run_segments(sub, exec_prog, negate, state: _SegState, *, max_supersteps,
         run_seg(
             sub, exec_prog, state, stop - state.done, inner_cap=inner_cap,
             exchange_period=exchange_period, tol=tol, num_vertices=num_vertices,
-            compute_backend=compute_backend,
+            compute_backend=compute_backend, block_e=block_e,
         )
         if checkpoint_every and ckpt_dir is not None and state.done % checkpoint_every == 0:
             ckpt.save(ckpt_dir, state.done, _ckpt_tree(state, p))
@@ -212,6 +214,7 @@ def run_bsp_resilient(
     source=None,
     compute_backend: str = "xla",
     driver: str = "fused",
+    block_e: int = 512,
     checkpoint_every: Optional[int] = None,
     ckpt_dir=None,
     fault_plan: Optional[FaultPlan] = None,
@@ -245,12 +248,14 @@ def run_bsp_resilient(
             "max_supersteps": int(max_supersteps), "inner_cap": int(inner_cap),
             "exchange_period": int(exchange_period), "tol": float(tol),
             "num_vertices": int(num_vertices), "checkpoint_every": int(checkpoint_every),
+            "block_e": int(block_e),
         })
     return _run_segments(
         sub, exec_prog, negate, state, max_supersteps=max_supersteps,
         inner_cap=inner_cap, exchange_period=exchange_period, tol=tol,
         num_vertices=num_vertices, compute_backend=compute_backend, driver=driver,
         checkpoint_every=checkpoint_every, ckpt_dir=ckpt_dir, fault_plan=fault_plan,
+        block_e=block_e,
     )
 
 
@@ -317,4 +322,5 @@ def resume_bsp(
         exchange_period=int(meta["exchange_period"]), tol=float(meta["tol"]),
         num_vertices=int(meta["num_vertices"]), compute_backend=backend, driver=drv,
         checkpoint_every=int(meta["checkpoint_every"]), ckpt_dir=d, fault_plan=fault_plan,
+        block_e=int(meta.get("block_e", 512)),
     )

@@ -264,6 +264,128 @@ def test_kp01_flags_unpadded_block_param():
     assert codes(fs) == ["KP01"] and "block_e" in fs[0].message
 
 
+# -------------------------------------------- KP01 x the megakernel entry
+
+
+KP_BSP_REF_STUB = """
+    def bsp_superstep_ref(lsrc, ldst, weight, val, num_out, *,
+                          combine="min", inner_cap=1, out_degree=None):
+        return val, None
+"""
+
+KP_BSP_CLEAN = """
+    from repro.kernels import ref
+    from repro.kernels.bsp_superstep import bsp_superstep_pallas
+
+    def _resolve_impl(impl, interpret):
+        return impl or "ref", bool(interpret)
+
+    def bsp_superstep(lsrc, ldst, weight, val, *, num_out, combine="min",
+                      inner_cap=1, out_degree=None,
+                      impl=None, block_e=512, interpret=None):
+        impl, interpret = _resolve_impl(impl, interpret)
+        if impl == "ref":
+            return ref.bsp_superstep_ref(
+                lsrc, ldst, weight, val, num_out,
+                combine=combine, inner_cap=inner_cap, out_degree=out_degree,
+            )
+        pad = (-lsrc.shape[1]) % block_e
+        return bsp_superstep_pallas(
+            lsrc, ldst, weight, val, out_degree,
+            num_out=num_out, combine=combine, inner_cap=inner_cap,
+            block_e=block_e, interpret=interpret,
+        )
+"""
+
+KP_BSP_UNPADDED = """
+    from repro.kernels import ref
+    from repro.kernels.bsp_superstep import bsp_superstep_pallas
+
+    def _resolve_impl(impl, interpret):
+        return impl or "ref", bool(interpret)
+
+    def bsp_superstep(lsrc, ldst, weight, val, *, num_out, combine="min",
+                      inner_cap=1, out_degree=None,
+                      impl=None, block_e=512, interpret=None):
+        impl, interpret = _resolve_impl(impl, interpret)
+        if impl == "ref":
+            return ref.bsp_superstep_ref(
+                lsrc, ldst, weight, val, num_out,
+                combine=combine, inner_cap=inner_cap, out_degree=out_degree,
+            )
+        return bsp_superstep_pallas(
+            lsrc, ldst, weight, val, out_degree,
+            num_out=num_out, combine=combine, inner_cap=inner_cap,
+            interpret=interpret,
+        )
+"""
+
+KP_BSP_DRIFTED_REF = """
+    from repro.kernels import ref
+    from repro.kernels.bsp_superstep import bsp_superstep_pallas
+
+    def _resolve_impl(impl, interpret):
+        return impl or "ref", bool(interpret)
+
+    def bsp_superstep(lsrc, ldst, weight, val, *, num_out, combine="min",
+                      inner_cap=1, out_degree=None,
+                      impl=None, block_e=512, interpret=None):
+        impl, interpret = _resolve_impl(impl, interpret)
+        if impl == "ref":
+            return ref.bsp_superstep_ref(
+                lsrc, ldst, weight, val,
+                combine=combine, inner_cap=inner_cap, out_degree=out_degree,
+            )
+        pad = (-lsrc.shape[1]) % block_e
+        return bsp_superstep_pallas(
+            lsrc, ldst, weight, val, out_degree,
+            num_out=num_out, combine=combine, inner_cap=inner_cap,
+            block_e=block_e, interpret=interpret,
+        )
+"""
+
+KP_BSP_EXTRA = {"src/repro/kernels/ref.py": KP_BSP_REF_STUB}
+
+
+def test_kp01_bsp_clean_twin_passes():
+    assert run(KP_BSP_CLEAN, select=["KP01"], path="src/repro/kernels/ops.py", extra=KP_BSP_EXTRA) == []
+
+
+def test_kp01_flags_bsp_entry_without_block_padding():
+    fs = run(KP_BSP_UNPADDED, select=["KP01"], path="src/repro/kernels/ops.py", extra=KP_BSP_EXTRA)
+    assert codes(fs) == ["KP01"]
+    assert fs[0].anchor == "bsp_superstep" and "block_e" in fs[0].message
+
+
+def test_kp01_flags_bsp_ref_signature_drift():
+    fs = run(KP_BSP_DRIFTED_REF, select=["KP01"], path="src/repro/kernels/ops.py", extra=KP_BSP_EXTRA)
+    assert codes(fs) == ["KP01"]
+    assert fs[0].anchor == "bsp_superstep" and "num_out" in fs[0].message
+
+
+def test_kp01_would_have_caught_a_padless_megakernel_entry():
+    """The committed `ops.bsp_superstep` analyzes clean; stripping its
+    batched block padding AND the block_e forwarding must flag — the exact
+    regression the checker exists to stop."""
+    ops_src = (REPO_ROOT / "src/repro/kernels/ops.py").read_text()
+    ref_src = (REPO_ROOT / "src/repro/kernels/ref.py").read_text()
+    srcs = {"src/repro/kernels/ops.py": ops_src, "src/repro/kernels/ref.py": ref_src}
+    assert analyze_sources(srcs, select=["KP01"]) == []
+    broken = ops_src.replace(
+        "    p, E = lsrc.shape\n"
+        "    block_e = max(min(block_e, E), 1)\n"
+        "    pad = (-E) % block_e\n",
+        "    p, E = lsrc.shape\n    pad = 0\n",
+    ).replace(
+        "inner_cap=inner_cap,\n        block_e=block_e, interpret=interpret,",
+        "inner_cap=inner_cap, interpret=interpret,",
+    )
+    assert broken != ops_src
+    fs = analyze_sources({**srcs, "src/repro/kernels/ops.py": broken}, select=["KP01"])
+    assert codes(fs) == ["KP01"]
+    assert fs[0].anchor == "bsp_superstep" and "block_e" in fs[0].message
+
+
 # ------------------------------------------------------------- RC01 / RC02
 
 

@@ -6,6 +6,10 @@ superstep per Python iteration. Final values, superstep counts, and every
 per-step / per-worker stat series must be identical across CC/SSSP/PR ×
 compute backends — and the fused path must cost exactly one dispatch.
 """
+import functools
+
+import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -88,6 +92,64 @@ def test_fused_driver_single_dispatch(built_small):
     base_f = eng.DISPATCH_COUNTS["fused"]
     alg.pagerank(sub_dir, g.num_vertices, num_iters=5, driver="fused")
     assert eng.DISPATCH_COUNTS["fused"] - base_f == 1
+
+
+def _nested_jaxprs(v):
+    if hasattr(v, "jaxpr"):  # ClosedJaxpr
+        yield v.jaxpr
+    elif hasattr(v, "eqns"):  # Jaxpr
+        yield v
+    elif isinstance(v, (tuple, list)):
+        for x in v:
+            yield from _nested_jaxprs(x)
+
+
+def _collect_converts(jaxpr, in_loop, out):
+    """(eqn, in_loop) for every convert_element_type, recursing through
+    nested jaxprs; in_loop flips once inside a while_loop's sub-jaxprs."""
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "convert_element_type":
+            out.append((eqn, in_loop))
+        inside = in_loop or eqn.primitive.name == "while"
+        for v in eqn.params.values():
+            for j in _nested_jaxprs(v):
+                _collect_converts(j, inside, out)
+
+
+def _is_int_float_convert(eqn):
+    src = eqn.invars[0].aval.dtype
+    dst = eqn.params["new_dtype"]
+    int_to_float = jnp.issubdtype(src, jnp.integer) and jnp.issubdtype(dst, jnp.floating)
+    float_to_int = jnp.issubdtype(src, jnp.floating) and jnp.issubdtype(dst, jnp.integer)
+    return int_to_float or float_to_int
+
+
+def test_fused_no_inloop_remap(built_small):
+    """Kernel backends run int32 programs in f32: the INF_I32 <-> INF_F32
+    remap must be hoisted to the driver boundary (paid once per run), not
+    traced into the fused while_loop body (paid once per superstep — the
+    `reach` fused wall regression). bool->int32 converts for message
+    counting are legitimate and must not trip this."""
+    _, sub, _ = built_small
+    prog = eng.get_program("reach")
+    exec_prog, negate = eng._exec_view(prog)
+    val = prog.init(sub, num_vertices=0, source=None)
+    val = -val if negate else val
+    closed = jax.make_jaxpr(
+        functools.partial(
+            eng._fused_bsp, prog=exec_prog, max_supersteps=8, inner_cap=4,
+            exchange_period=1, tol=0.0, num_vertices=0, backend="ref",
+        )
+    )(sub, val)
+    converts = []
+    _collect_converts(closed.jaxpr, False, converts)
+    remaps_outside = [e for e, in_loop in converts if not in_loop and _is_int_float_convert(e)]
+    remaps_inside = [e for e, in_loop in converts if in_loop and _is_int_float_convert(e)]
+    assert remaps_outside, "boundary remap vanished — is the trace still the int32 kernel path?"
+    assert not remaps_inside, (
+        "int32<->float32 remap traced inside the fused loop body: "
+        + "; ".join(str(e) for e in remaps_inside)
+    )
 
 
 def test_messages_per_step_worker_consistent(built_small):

@@ -1,0 +1,229 @@
+"""Megakernel coverage matrix (PR 9 tentpole).
+
+`ops.bsp_superstep` — the per-worker Pallas superstep megakernel — must be
+BIT-identical to the ref oracle (values AND per-worker iteration counts)
+for the full VertexProgram combine vocabulary across block sizes and
+interpret modes, including edge streams that do not divide `block_e` and
+tail blocks of pure padding. At the engine level the pallas backend must be
+bit-identical — values and BSPStats — to the xla path for all five
+registered programs at every `block_e`. And the speculative window commit
+must make the chunked partition driver bit-identical to the
+one-edge-at-a-time scan for every registered scorer on every backend.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import PARTITIONERS, ebg_partition_chunked
+from repro.core.streaming import streaming_chunked_partition, streaming_scan_partition
+from repro.core.types import Graph
+from repro.graph import algorithms as alg
+from repro.kernels import dispatch, ops, ref
+
+BLOCKS = (1, 64, 256)
+PROGRAMS = ("cc", "bfs", "sssp", "reach", "pr")
+SCORERS = ("ebv", "hdrf", "greedy")
+
+
+def _stats_equal(a, b):
+    assert a.supersteps == b.supersteps
+    np.testing.assert_array_equal(a.messages_per_worker, b.messages_per_worker)
+    np.testing.assert_array_equal(a.messages_per_step, b.messages_per_step)
+    np.testing.assert_array_equal(a.messages_per_step_worker, b.messages_per_step_worker)
+    np.testing.assert_array_equal(a.inner_iters_per_step, b.inner_iters_per_step)
+    np.testing.assert_array_equal(a.comp_work_per_worker, b.comp_work_per_worker)
+
+
+# ------------------------------------------------- ops-level bit parity
+
+
+def _streams(seed=0, p=4, V=33, E=77):
+    """Random [p, E] edge streams; E=77 divides none of BLOCKS, so the
+    wrapper's batched block padding is live in every pallas run."""
+    rng = np.random.default_rng(seed)
+    lsrc = jnp.asarray(rng.integers(0, V, (p, E)), jnp.int32)
+    ldst = jnp.asarray(np.sort(rng.integers(0, V, (p, E)), axis=1), jnp.int32)
+    w = jnp.asarray(rng.random((p, E), np.float32) + 0.1, jnp.float32)
+    val = jnp.asarray(rng.random((p, V), np.float32) * 10, jnp.float32)
+    deg = jnp.asarray(rng.integers(0, 5, (p, V)), jnp.float32)
+    return lsrc, ldst, w, val, deg
+
+
+@pytest.mark.parametrize("interpret", [True, None], ids=["interpret", "sniffed"])
+@pytest.mark.parametrize("combine", ["min", "max", "sum"])
+def test_ops_bsp_superstep_bit_parity(combine, interpret):
+    lsrc, ldst, w, val, deg = _streams()
+    kw = dict(num_out=33, combine=combine, inner_cap=7)
+    if combine == "sum":
+        kw["out_degree"] = deg
+    r_out, r_it = ops.bsp_superstep(lsrc, ldst, w, val, impl="ref", **kw)
+    for block_e in BLOCKS:
+        p_out, p_it = ops.bsp_superstep(
+            lsrc, ldst, w, val, impl="pallas", interpret=interpret, block_e=block_e, **kw
+        )
+        np.testing.assert_array_equal(np.asarray(p_out), np.asarray(r_out),
+                                      err_msg=f"{combine} values @ block_e={block_e}")
+        np.testing.assert_array_equal(np.asarray(p_it), np.asarray(r_it),
+                                      err_msg=f"{combine} iters @ block_e={block_e}")
+
+
+@pytest.mark.parametrize("combine", ["min", "sum"])
+def test_ops_all_padded_tail_block(combine):
+    """A caller-supplied tail block of nothing but identity-weight edges at
+    the dump slot must be a no-op for the accumulator AND the convergence
+    flag (an all-pad block must not keep the fixpoint loop spinning)."""
+    rng = np.random.default_rng(5)
+    p, V, block = 2, 17, 64
+    identity = 0.0 if combine == "sum" else float(ref.INF)
+    lsrc = jnp.asarray(np.concatenate(
+        [rng.integers(0, V, (p, block)), np.zeros((p, block))], axis=1), jnp.int32)
+    ldst = jnp.asarray(np.concatenate(
+        [np.sort(rng.integers(0, V - 1, (p, block)), axis=1),
+         np.full((p, block), V - 1)], axis=1), jnp.int32)
+    w = jnp.asarray(np.concatenate(
+        [rng.random((p, block), np.float32) + 0.1,
+         np.full((p, block), identity, np.float32)], axis=1), jnp.float32)
+    val = jnp.asarray(rng.random((p, V), np.float32) * 10, jnp.float32)
+    kw = dict(num_out=V, combine=combine, inner_cap=5)
+    if combine == "sum":
+        kw["out_degree"] = jnp.asarray(rng.integers(0, 5, (p, V)), jnp.float32)
+    r_out, r_it = ops.bsp_superstep(lsrc, ldst, w, val, impl="ref", **kw)
+    p_out, p_it = ops.bsp_superstep(
+        lsrc, ldst, w, val, impl="pallas", interpret=True, block_e=block, **kw
+    )
+    np.testing.assert_array_equal(np.asarray(p_out), np.asarray(r_out))
+    np.testing.assert_array_equal(np.asarray(p_it), np.asarray(r_it))
+
+
+# ------------------------------------------- engine-level program parity
+
+
+def _run(name, built, backend, block_e, driver="fused"):
+    g, sub_sym, sub_dir = built
+    kw = dict(compute_backend=backend, block_e=block_e, driver=driver)
+    if name == "cc":
+        return alg.connected_components(sub_sym, **kw)
+    if name == "reach":
+        return alg.reachability(sub_sym, **kw)
+    if name == "pr":
+        return alg.pagerank(sub_dir, g.num_vertices, num_iters=5, **kw)
+    cov = g.covered_vertices()
+    src_v = int(cov[np.argmax(g.degrees()[cov])])
+    return (alg.bfs if name == "bfs" else alg.sssp)(sub_dir, src_v, **kw)
+
+
+@pytest.mark.parametrize("name", PROGRAMS)
+def test_engine_megakernel_parity_across_blocks(built_small, name):
+    """compute_backend="pallas" (megakernel) ≡ "xla" ≡ "ref": bit-identical
+    values and BSPStats at every block_e — the acceptance pin for routing
+    the fused driver through ops.bsp_superstep."""
+    xla_vals, xla_stats = _run(name, built_small, "xla", 512)
+    ref_vals, ref_stats = _run(name, built_small, "ref", 512)
+    np.testing.assert_array_equal(np.asarray(ref_vals), np.asarray(xla_vals))
+    _stats_equal(ref_stats, xla_stats)
+    for block_e in BLOCKS:
+        vals, stats = _run(name, built_small, "pallas", block_e)
+        np.testing.assert_array_equal(np.asarray(vals), np.asarray(xla_vals),
+                                      err_msg=f"{name} @ block_e={block_e}")
+        _stats_equal(stats, xla_stats)
+
+
+def test_host_driver_threads_block_e(built_small):
+    """block_e reaches the per-superstep host driver too (it rides the
+    _jit_superstep_sim statics, not just the fused loop's)."""
+    _, sub, _ = built_small
+    base_vals, base_stats = alg.connected_components(sub, driver="host")
+    for block_e in (1, 256):
+        vals, stats = alg.connected_components(
+            sub, driver="host", compute_backend="pallas", block_e=block_e
+        )
+        np.testing.assert_array_equal(np.asarray(vals), np.asarray(base_vals))
+        _stats_equal(stats, base_stats)
+
+
+# ------------------------------------------------ window-commit ≡ scan
+
+
+def _rand_graph(seed=7, V=200, E=900):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, V, E).astype(np.int32)
+    dst = rng.integers(0, V, E).astype(np.int32)
+    m = src != dst
+    return Graph(src=src[m], dst=dst[m], num_vertices=V)
+
+
+@pytest.mark.parametrize("scorer", SCORERS)
+def test_window_commit_matches_scan(scorer):
+    g, p = _rand_graph(), 8
+    scan = np.asarray(streaming_scan_partition(g, p, scorer).part)
+    for backend in ("xla", "ref", "pallas"):
+        for block in BLOCKS:
+            win = np.asarray(streaming_chunked_partition(
+                g, p, scorer, block=block, compute_backend=backend, commit="window"
+            ).part)
+            np.testing.assert_array_equal(
+                win, scan, err_msg=f"{scorer}/{backend}/block={block}"
+            )
+
+
+def test_frozen_commit_actually_diverges():
+    """Discriminator: the window≡scan pin above would be vacuous if frozen
+    block commits already matched the scan on this graph."""
+    g, p = _rand_graph(), 8
+    diverged = False
+    for scorer in SCORERS:
+        scan = np.asarray(streaming_scan_partition(g, p, scorer).part)
+        frz = np.asarray(streaming_chunked_partition(
+            g, p, scorer, block=256, commit="frozen"
+        ).part)
+        diverged |= bool((frz != scan).any())
+    assert diverged, "frozen==scan for every scorer: graph too easy to discriminate"
+
+
+def test_ebg_chunked_window_equals_faithful_partitioner():
+    """The registered partitioners surface the commit knob: ebg_chunked
+    with commit="window" reproduces the faithful ebg scan exactly."""
+    g, p = _rand_graph(11), 8
+    scan = np.asarray(PARTITIONERS["ebg"](g, p).part)
+    win = np.asarray(ebg_partition_chunked(g, p, block=64, commit="window").part)
+    np.testing.assert_array_equal(win, scan)
+
+
+def test_commit_mode_validation():
+    from repro.api.config import EBGConfig
+
+    g = _rand_graph(3, V=20, E=40)
+    with pytest.raises(ValueError, match="commit"):
+        streaming_chunked_partition(g, 4, "ebv", commit="optimistic")
+    with pytest.raises(ValueError, match="commit"):
+        EBGConfig(commit="optimistic")
+
+
+# --------------------------------------------- dispatch platform cache
+
+
+def test_platform_sniff_cached_once(monkeypatch):
+    calls = {"n": 0}
+    real = jax.default_backend
+
+    def counting():
+        calls["n"] += 1
+        return real()
+
+    monkeypatch.setattr(dispatch.jax, "default_backend", counting)
+    dispatch.set_platform_is_tpu(None)  # drop the cache -> next call re-sniffs
+    try:
+        first = dispatch.default_interpret(None)
+        for _ in range(5):
+            assert dispatch.default_interpret(None) == first
+        assert calls["n"] == 1  # one sniff per process, not per resolution
+        dispatch.set_platform_is_tpu(True)  # forced platform: no re-sniff
+        assert dispatch.default_interpret(None) is False
+        assert dispatch.default_interpret(True) is True  # explicit wins
+        dispatch.set_platform_is_tpu(False)
+        assert dispatch.default_interpret(None) is True
+        assert dispatch.default_interpret(False) is False
+        assert calls["n"] == 1
+    finally:
+        dispatch.set_platform_is_tpu(None)  # other tests re-sniff the real backend
