@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import json
 import os
+import resource
 import subprocess
 import sys
 from pathlib import Path
@@ -49,7 +50,11 @@ HYPOTHESES = {
 }
 
 
-def run_plan(arch: str, shape: str, plan: str, out: str = "experiments/dryrun"):
+def run_plan(arch: str, shape: str, plan: str, out: str = "experiments/dryrun") -> float:
+    """Run one dryrun plan in a subprocess; returns the RUSAGE_CHILDREN
+    high-water RSS (MB) after it exits — each plan needs a fresh jax, so
+    the children high-water mark is the honest per-stage peak the parent's
+    own ru_maxrss can't see."""
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
     cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
@@ -57,6 +62,9 @@ def run_plan(arch: str, shape: str, plan: str, out: str = "experiments/dryrun"):
     r = subprocess.run(cmd, capture_output=True, text=True, timeout=3000, env=env)
     print(r.stdout[-400:])
     assert r.returncode == 0, r.stderr[-2000:]
+    peak_mb = resource.getrusage(resource.RUSAGE_CHILDREN).ru_maxrss / 1024.0
+    print(f"  children peak rss {peak_mb:.0f} MB")
+    return peak_mb
 
 
 def load(arch, shape, plan, out="experiments/dryrun"):

@@ -22,7 +22,14 @@ terminate answered-or-named-failure), and a megakernel section (schema 6):
 per-program xla-fused vs Pallas-superstep-megakernel walls with asserted
 bit-parity (interpreter walls on a CPU host; the compiled path lights up
 on accelerators) plus the window-commit partition wall vs the faithful
-scan (`matches_scan` asserted) and the frozen chunked commit.
+scan (`matches_scan` asserted) and the frozen chunked commit, and a
+scale section (schema 7): the out-of-core pipeline — sharded rmat ->
+external degree-sum order -> streamed partition -> streamed two-level
+build -> CC — on a downscaled twin with per-stage wall + peak-RSS
+metering and `matches_in_memory` (bit-parity against the fully
+in-memory pipeline) asserted; `python -m benchmarks.scale_pipeline
+--full` runs the same pipeline at 2^25 vertices / 2^27 edges. The main
+partition/build stages also record the peak-RSS high-water mark.
 
 Two speedup figures per engine program:
   - wall_speedup: measured host/fused wall ratio. On a CPU host, dispatch
@@ -342,12 +349,16 @@ def main(repeats: int = 3, out_path: Path = OUT) -> dict:
     graph = rmat(1 << 14, 200_000, seed=7, a=0.65, b=0.15, c=0.15)
     pipe = GraphPipeline(graph).partition("ebg_chunked", parts=P)
 
+    from benchmarks.scale_pipeline import peak_rss_mb, run_scale
+
     t0 = time.perf_counter()
     result = pipe.result
     partition_s = time.perf_counter() - t0
+    partition_rss = peak_rss_mb()
 
     build_s = _med(lambda: build_subgraphs(graph, result, symmetrize=True), repeats)
     build_legacy_s = _med(lambda: build_subgraphs_legacy(graph, result, symmetrize=True), repeats)
+    build_rss = peak_rss_mb()
 
     quality = _partition_quality_section(graph, pipe)
 
@@ -385,17 +396,20 @@ def main(repeats: int = 3, out_path: Path = OUT) -> dict:
     serving = _serving_section(repeats)
     resilience = _resilience_section()
     megakernel = _megakernel_section(repeats)
+    scale = run_scale()
 
     data = {
-        "schema": 6,
+        "schema": 7,
         "graph": {"family": "twitter_like_smoke", "num_vertices": graph.num_vertices,
                   "num_edges": graph.num_edges, "p": P},
-        "partition": {"partitioner": "ebg_chunked", "wall_s": round(partition_s, 3)},
+        "partition": {"partitioner": "ebg_chunked", "wall_s": round(partition_s, 3),
+                      "peak_rss_mb": partition_rss},
         "partition_quality": quality,
         "build": {
             "wall_s": round(build_s, 3),
             "legacy_wall_s": round(build_legacy_s, 3),
             "speedup_vs_legacy": round(build_legacy_s / build_s, 2),
+            "peak_rss_mb": build_rss,
         },
         "engine": {
             **engine,
@@ -410,6 +424,7 @@ def main(repeats: int = 3, out_path: Path = OUT) -> dict:
         "serving": serving,
         "resilience": resilience,
         "megakernel": megakernel,
+        "scale": scale,
     }
     # The structural claims CI holds the line on: the fused driver turns
     # one-dispatch-per-superstep into one dispatch per run, distributed
@@ -434,6 +449,12 @@ def main(repeats: int = 3, out_path: Path = OUT) -> dict:
     assert megakernel["parity_all"], megakernel["programs"]
     assert megakernel["window_commit"]["matches_scan"], megakernel["window_commit"]
     assert engine["reach"]["wall_speedup"] >= 1.0, engine["reach"]
+    # Scale claims (schema 7): the out-of-core downscaled twin is
+    # bit-identical to the in-memory pipeline, came from a real multi-shard
+    # store, and ran under two-level addressing.
+    assert scale["matches_in_memory"], scale
+    assert scale["graph"]["num_shards"] >= 4, scale["graph"]
+    assert scale["addressing"] == "two_level", scale
 
     out_path.write_text(json.dumps(data, indent=2) + "\n")
     e = data["engine"]["total"]
@@ -451,7 +472,9 @@ def main(repeats: int = 3, out_path: Path = OUT) -> dict:
         f"{resilience['crash_resume']['resume_matches_uninterrupted']}, chaos retries "
         f"{resilience['chaos_serving']['retries']} | megakernel parity "
         f"{megakernel['parity_all']}, window "
-        f"{megakernel['window_commit']['window_speedup_vs_scan']}x vs scan -> {out_path.name}"
+        f"{megakernel['window_commit']['window_speedup_vs_scan']}x vs scan | scale "
+        f"oc-parity {scale['matches_in_memory']}, rf {scale['replication_factor']}, "
+        f"peak rss {scale['peak_rss_mb']}MB -> {out_path.name}"
     )
     return data
 

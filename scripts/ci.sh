@@ -40,18 +40,35 @@ else
   # xla vs Pallas-superstep walls + window-commit partition wall) so the
   # perf trajectory is tracked.
   python -m benchmarks.pipeline_smoke
-  # Hold the megakernel contract in the emitted artifact itself: schema 6,
-  # megakernel section present, and every parity flag true (bit-identical
-  # xla/pallas engine results and window-commit == scan assignments).
+  # Hold the contracts in the emitted artifact itself: schema 7, the
+  # megakernel section with every parity flag true (bit-identical
+  # xla/pallas engine results and window-commit == scan assignments), and
+  # the scale section (out-of-core pipeline twin: >= 4 shards, two-level
+  # addressing, bit-parity with the in-memory pipeline, per-stage RSS).
   python - <<'PY'
 import json
 d = json.load(open("BENCH_pipeline.json"))
-assert d["schema"] == 6, d["schema"]
+assert d["schema"] == 7, d["schema"]
 mk = d["megakernel"]
 assert mk["parity_all"] is True, mk["programs"]
 assert all(row["parity"] is True for row in mk["programs"].values()), mk["programs"]
 assert mk["window_commit"]["matches_scan"] is True, mk["window_commit"]
-print("megakernel section OK: schema 6, parity flags all true")
+sc = d["scale"]
+assert sc["matches_in_memory"] is True, sc
+assert sc["graph"]["num_shards"] >= 4, sc["graph"]
+assert sc["addressing"] == "two_level", sc
+assert {"rmat_to_store", "partition", "build", "cc"} <= set(sc["stages"]), sc["stages"]
+assert all("peak_rss_mb" in st for st in sc["stages"].values()), sc["stages"]
+print("megakernel + scale sections OK: schema 7, parity flags all true")
+PY
+  # Downscaled out-of-core smoke: 2^16 vertices streamed from >= 4
+  # shards; run_scale()'s parity twin asserts out-of-core == in-memory
+  # (partition assignments AND CC labels, bit-for-bit).
+  python - <<'PY'
+from benchmarks.scale_pipeline import run_scale
+row = run_scale()
+assert row["matches_in_memory"] is True and row["graph"]["num_shards"] >= 4, row
+print("out-of-core smoke OK: oc == in-memory on", row["graph"]["num_shards"], "shards")
 PY
 fi
 # Serving smoke trace: a tiny end-to-end replay through the admission

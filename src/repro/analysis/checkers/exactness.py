@@ -3,10 +3,15 @@
 The kernel backends run int32 semirings in f32 via the INF_I32↔INF_F32
 remap in `engine._local_fixpoint` — exact only for magnitudes below 2^24.
 Every public entry point from which that remap is reachable must pass
-through a dominating guard (`engine.check_int32_kernel_gid`-style:
-compare against `1 << 24`, raise) BEFORE the remap can run. This is the
-static version of the runtime ValueError at engine.py's
-`check_int32_kernel_gid`.
+through a dominating guard (compare against `1 << 24`, raise) BEFORE the
+remap can run. The repo has two such guards, and the structural detector
+below recognizes both without naming them: `engine.check_int32_kernel_gid`
+(flat addressing — the global-id space IS the kernel value domain, so
+max(gid) is the bound) and `engine.check_int32_kernel_values` (two-level
+addressing — enforcement moves to the kernel VALUE boundary, where
+`engine._kernel_value_boundary` proves a per-worker bound: the rank-codec
+size for label-domain programs, the covered-vertex count for unit-weight
+hop counts). This is the static version of those runtime ValueErrors.
 
 Detection is interprocedural over the analyzed module set:
 
@@ -209,8 +214,8 @@ class ExactnessChecker(Checker):
                 info.node.lineno,
                 info.node.col_offset,
                 f"`{info.qualname}` reaches the int->f32 exactness remap without a "
-                "dominating 1 << 24 guard; call a check_int32_kernel_gid-style guard "
-                "before the remap on every path",
+                "dominating 1 << 24 guard; call a check_int32_kernel_gid- or "
+                "check_int32_kernel_values-style guard before the remap on every path",
                 anchor=info.qualname,
             )
 

@@ -42,6 +42,7 @@ from repro.graph.build import SubgraphSet, build_subgraphs
 from repro.graph.engine import (
     BSPStats,
     VertexProgram,
+    _kernel_value_boundary,
     check_driver,
     check_int32_kernel_labels,
     get_program,
@@ -117,10 +118,11 @@ class SubgraphSpec:
     max_v: int
     max_e: int
     max_msg: int = 2048
+    addressing: str = "two_level"
 
     @classmethod
     def of(cls, sub: SubgraphSet) -> "SubgraphSpec":
-        return cls(sub.num_parts, sub.max_v, sub.max_e, sub.max_msg)
+        return cls(sub.num_parts, sub.max_v, sub.max_e, sub.max_msg, sub.addressing)
 
     def array_specs(self) -> tuple[dict, dict]:
         """ShapeDtypeStructs + statics matching `subgraphs_to_arrays`."""
@@ -135,7 +137,8 @@ class SubgraphSpec:
             gid=v2(i32), vmask=v2(b), is_master=v2(b), out_degree=v2(f32),
             send_idx=m3(i32), recv_idx=m3(i32), msg_mask=m3(b), recv_mask=m3(b),
         )
-        statics = dict(num_parts=p, max_v=self.max_v, max_e=self.max_e, max_msg=self.max_msg)
+        statics = dict(num_parts=p, max_v=self.max_v, max_e=self.max_e, max_msg=self.max_msg,
+                       addressing=self.addressing)
         return arrays, statics
 
     def value_spec(self, prog: VertexProgram) -> jax.ShapeDtypeStruct:
@@ -438,8 +441,15 @@ class GraphPipeline:
             block_e=block_e,
         )
         init = prog.init(sub, num_vertices=self.graph.num_vertices, source=source)
+        # Two-level value boundary (host-side, before tracing): label-domain
+        # programs run on dense ranks so kernels never see raw global ids.
+        # Rank compression is order-preserving, so it commutes with the
+        # runner's internal max→min negation; output decodes below.
+        init, codec = _kernel_value_boundary(prog, sub, init, compute_backend)
         with mesh:
             val, msgs, steps, msgs_steps, iters_steps = jax.jit(stepper)(arrays, init)
+        if codec is not None:
+            val = codec.decode(val)
         steps = int(steps)
         msgs_sw = np.asarray(msgs_steps, np.int64)[:steps]
         iters_sw = np.asarray(iters_steps, np.int64)[:steps]

@@ -338,6 +338,57 @@ def streaming_scan_partition(
 # ---------------------------------------------------------- chunked driver
 
 
+def _score_commit_loop(
+    e_count, v_count, mu0, mv0, valb, wub, wvb, *,
+    num_parts: int, weighted: bool, balance: str, window: bool,
+    ce: float, cv: float, eps: float, inv_e, inv_v,
+    ub=None, vb=None,
+):
+    """The sequential exact in-block commit shared by every dense-membership
+    block driver (the in-memory chunked scan, the out-of-core per-block
+    step, and the shard_map'd sharded-state step — bit-parity between them
+    is by construction, not by test alone). Scores the block's edges
+    against the block-start miss tables (mu0/mv0: [p, B]), commits balance
+    counters exactly and sequentially, and returns
+    (e_count, v_count, parts). Pad edges (valid=False) are scored but
+    never committed and route to the out-of-bounds row `num_parts`.
+    `window=True` replays each commit's membership consequences onto later
+    conflicted columns (needs ub/vb) — assignments bit-identical to the
+    one-edge-at-a-time scan driver."""
+    p = num_parts
+    B = valb.shape[0]
+
+    def body(j, carry):
+        e_c, v_c, mu, mv, parts = carry
+        if balance == "static":
+            norm = inv_e
+        else:
+            norm = 1.0 / (eps + (jnp.max(e_c) - jnp.min(e_c)))
+        gain = wub[j] * mu[:, j] + wvb[j] * mv[:, j] if weighted else mu[:, j] + mv[:, j]
+        score = gain + ce * e_c * norm + cv * v_c * inv_v
+        i = jnp.argmin(score).astype(jnp.int32)
+        live = valb[j].astype(jnp.float32)
+        e_c = e_c.at[i].add(live)
+        v_c = v_c.at[i].add(live * (mu[i, j] + mv[i, j]))
+        if window:
+            # Speculative window commit: the block was scored in one
+            # shot from block-start state; replay this commit onto the
+            # remaining columns (clear the winner's miss rows where a
+            # later edge touches the committed endpoints) so only
+            # CONFLICTED edges see corrected scores — bit-identical
+            # to the one-edge-at-a-time scan driver.
+            hit_u = (ub == ub[j]) | (ub == vb[j])
+            hit_v = (vb == ub[j]) | (vb == vb[j])
+            mu = mu.at[i].set(jnp.where(hit_u & valb[j], 0.0, mu[i]))
+            mv = mv.at[i].set(jnp.where(hit_v & valb[j], 0.0, mv[i]))
+        return e_c, v_c, mu, mv, parts.at[j].set(jnp.where(valb[j], i, p))
+
+    e_count, v_count, _, _, parts = jax.lax.fori_loop(
+        0, B, body, (e_count, v_count, mu0, mv0, jnp.zeros((B,), jnp.int32))
+    )
+    return e_count, v_count, parts
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("num_parts", "num_vertices", "block", "backend", "weighted", "balance",
@@ -371,41 +422,18 @@ def _streaming_chunked(
                 ub, vb, valb, wub, wvb = uv_block  # [B]
             else:
                 ub, vb, valb = uv_block
-            # Vectorized membership lookups against block-start keep: (p, B).
+            # Vectorized membership lookups against block-start keep: (p, B),
+            # then the shared sequential exact in-block commit
+            # (`_score_commit_loop`). Pad edges are scored (uniform work
+            # per lane) but never committed: they leave e_count/v_count
+            # untouched and route to row `p`.
             mu0 = (~keep[:, ub]).astype(jnp.float32)
             mv0 = (~keep[:, vb]).astype(jnp.float32)
-
-            # Sequential exact commit of balance terms within the block. Pad
-            # edges are scored (uniform work per lane) but never committed:
-            # they leave e_count/v_count untouched and route to row `p`.
-            def body(j, carry):
-                e_c, v_c, mu, mv, parts = carry
-                if balance == "static":
-                    norm = inv_e
-                else:
-                    norm = 1.0 / (eps + (jnp.max(e_c) - jnp.min(e_c)))
-                gain = wub[j] * mu[:, j] + wvb[j] * mv[:, j] if weighted else mu[:, j] + mv[:, j]
-                score = gain + ce * e_c * norm + cv * v_c * inv_v
-                i = jnp.argmin(score).astype(jnp.int32)
-                live = valb[j].astype(jnp.float32)
-                e_c = e_c.at[i].add(live)
-                v_c = v_c.at[i].add(live * (mu[i, j] + mv[i, j]))
-                if window:
-                    # Speculative window commit: the block was scored in one
-                    # shot from block-start state; replay this commit onto the
-                    # remaining columns (clear the winner's miss rows where a
-                    # later edge touches the committed endpoints) so only
-                    # CONFLICTED edges see corrected scores — bit-identical
-                    # to the one-edge-at-a-time scan driver.
-                    hit_u = (ub == ub[j]) | (ub == vb[j])
-                    hit_v = (vb == ub[j]) | (vb == vb[j])
-                    mu = mu.at[i].set(jnp.where(hit_u & valb[j], 0.0, mu[i]))
-                    mv = mv.at[i].set(jnp.where(hit_v & valb[j], 0.0, mv[i]))
-                return e_c, v_c, mu, mv, parts.at[j].set(jnp.where(valb[j], i, p))
-
-            e_count, v_count, _, _, parts = jax.lax.fori_loop(
-                0, ub.shape[0], body,
-                (e_count, v_count, mu0, mv0, jnp.zeros((ub.shape[0],), jnp.int32)),
+            e_count, v_count, parts = _score_commit_loop(
+                e_count, v_count, mu0, mv0, valb,
+                wub if weighted else None, wvb if weighted else None,
+                num_parts=p, weighted=weighted, balance=balance, window=window,
+                ce=ce, cv=cv, eps=eps, inv_e=inv_e, inv_v=inv_v, ub=ub, vb=vb,
             )
             # Batched keep update after the block commits; pad edges carry the
             # out-of-bounds row `p` and are dropped by the scatter.

@@ -55,10 +55,38 @@ class SubgraphSet:
     max_v: int = dataclasses.field(metadata=dict(static=True))
     max_e: int = dataclasses.field(metadata=dict(static=True))
     max_msg: int = dataclasses.field(metadata=dict(static=True))
+    # Addressing contract for the kernel boundary (ADDRESSING_MODES):
+    #   "two_level"  kernels index the (worker, local-id) space; global ids
+    #                live only in `gid`/`local_to_global` and the engine's
+    #                exactness guard checks per-worker VALUE maxima, so
+    #                graphs with >= 2^24 vertices stay exact on ref/pallas.
+    #   "flat"       legacy contract: `gid` doubles as the kernel-visible
+    #                label domain (CC labels ARE global ids), so the engine
+    #                guard must reject global ids >= 2^24 on f32 backends.
+    addressing: str = dataclasses.field(default="two_level", metadata=dict(static=True))
 
     @property
     def num_local_vertices(self) -> jax.Array:
         return self.vmask.sum(axis=1)
+
+    @property
+    def local_to_global(self) -> np.ndarray:
+        """Per-worker local-id → global-id map, int64 host-side: row i maps
+        worker i's local ids to global vertex ids (pad slots: -1). The
+        device-resident `gid` stays int32 (jax's no-x64 default would
+        silently canonicalize int64 anyway, and V < 2^31 is the engine
+        ceiling); this property is the declared int64 view for everything
+        ABOVE the kernel boundary."""
+        return np.asarray(self.gid, np.int64)
+
+
+ADDRESSING_MODES = ("two_level", "flat")
+
+
+def check_addressing(mode) -> str:
+    if mode not in ADDRESSING_MODES:
+        raise ValueError(f"addressing must be one of {ADDRESSING_MODES}, got {mode!r}")
+    return mode
 
 
 def _pad_to(x: np.ndarray, n: int, fill) -> np.ndarray:
@@ -102,6 +130,43 @@ def _elect_masters(src, dst, part, p, num_vertices):
     return master_part, v_of, p_of, inv
 
 
+def _exchange_tables(vp, vcol, vv, vkeys, v_off, master_part, *, p, N, max_v, pad_multiple):
+    """Mirror↔master exchange tables from the grouped local vertex space
+    (vp: owning part per unique (part, vertex) pair, nondecreasing; vcol:
+    local id; vv: global id; vkeys/v_off: the strictly increasing fused
+    lookup key and per-part offsets). Shared verbatim by the in-memory
+    vectorized builder and the two-pass streamed builder — exchange-table
+    parity between them is by construction."""
+    mp_all = master_part[vv]
+    is_mir = mp_all != vp
+    mi = vp[is_mir]  # sender (mirror-holding) part i
+    mj = mp_all[is_mir]  # receiver (master) part j
+    lv = vcol[is_mir]  # local id at sender
+    lm = np.searchsorted(vkeys, mj * N + vv[is_mir]) - v_off[mj]  # local id at master
+    # Group by (i, j); within a pair, entries ascend by sender-local id —
+    # the legacy lst.sort() order (lv is unique per sender).
+    stride = np.int64(max_v + 1)
+    mo = np.argsort((mi * p + mj) * stride + lv, kind="stable")
+    gi, gj, glv, glm = mi[mo], mj[mo], lv[mo], lm[mo]
+    pairkey = gi * p + gj
+    cnts = np.bincount(pairkey, minlength=p * p).astype(np.int64)
+    max_msg = max(int(cnts.max()) if cnts.size else 1, 1)
+    max_msg = int(-(-max_msg // pad_multiple) * pad_multiple)
+    pair_off = np.zeros(p * p + 1, np.int64)
+    np.cumsum(cnts, out=pair_off[1:])
+    m_idx = np.arange(gi.shape[0], dtype=np.int64) - pair_off[pairkey]
+
+    send_idx = np.zeros((p, p, max_msg), np.int32)
+    recv_idx = np.full((p, p, max_msg), max_v, np.int32)
+    msg_mask = np.zeros((p, p, max_msg), bool)
+    recv_mask = np.zeros((p, p, max_msg), bool)
+    send_idx[gi, gj, m_idx] = glv
+    recv_idx[gj, gi, m_idx] = glm
+    msg_mask[gi, gj, m_idx] = True
+    recv_mask[gj, gi, m_idx] = True
+    return send_idx, recv_idx, msg_mask, recv_mask, max_msg
+
+
 def build_subgraphs(
     graph: Graph,
     result: PartitionResult,
@@ -109,6 +174,7 @@ def build_subgraphs(
     weights: np.ndarray | None = None,
     symmetrize: bool = False,
     pad_multiple: int = 8,
+    addressing: str = "two_level",
 ) -> SubgraphSet:
     """Vectorized builder: no per-part Python loops.
 
@@ -117,9 +183,21 @@ def build_subgraphs(
     and the dict-of-lists exchange-table pass by one lexsort over the
     mirror set. O(E log E) numpy, edge-list streaming — the partitioner's
     output no longer dominates end-to-end wall-clock via builder glue.
+
+    Emits two-level (worker, local-id) addressing by default: kernels see
+    int32 local ids bounded by max_v (far below 2^24), global ids live in
+    the int64 `local_to_global` view. `addressing="flat"` restores the
+    legacy contract where kernel label domains span global ids.
     """
+    check_addressing(addressing)
     src, dst, part, weights, p = _prepare_edges(graph, result, weights, symmetrize)
     N = graph.num_vertices
+    if N > np.iinfo(np.int32).max:
+        raise ValueError(
+            f"subgraph gid table is int32: num_vertices={N} >= 2^31 is past the "
+            "engine ceiling (two-level addressing lifts the 2^24 KERNEL bound, "
+            "not the global-id width)"
+        )
     E = src.shape[0]
     master_part, v_of, p_of, inv = _elect_masters(src, dst, part, p, N)
 
@@ -192,32 +270,10 @@ def build_subgraphs(
     edge_mask_s[row2, col2] = True
 
     # ---- mirror↔master exchange tables, vectorized over the mirror set.
-    mp_all = master_part[vv]
-    is_mir = mp_all != vp
-    mi = vp[is_mir]  # sender (mirror-holding) part i
-    mj = mp_all[is_mir]  # receiver (master) part j
-    lv = vcol[is_mir]  # local id at sender
-    lm = np.searchsorted(vkeys, mj * N + vv[is_mir]) - v_off[mj]  # local id at master
-    # Group by (i, j); within a pair, entries ascend by sender-local id —
-    # the legacy lst.sort() order (lv is unique per sender).
-    mo = np.argsort((mi * p + mj) * stride + lv, kind="stable")
-    gi, gj, glv, glm = mi[mo], mj[mo], lv[mo], lm[mo]
-    pairkey = gi * p + gj
-    cnts = np.bincount(pairkey, minlength=p * p).astype(np.int64)
-    max_msg = max(int(cnts.max()) if cnts.size else 1, 1)
-    max_msg = int(-(-max_msg // pad_multiple) * pad_multiple)
-    pair_off = np.zeros(p * p + 1, np.int64)
-    np.cumsum(cnts, out=pair_off[1:])
-    m_idx = np.arange(gi.shape[0], dtype=np.int64) - pair_off[pairkey]
-
-    send_idx = np.zeros((p, p, max_msg), np.int32)
-    recv_idx = np.full((p, p, max_msg), max_v, np.int32)
-    msg_mask = np.zeros((p, p, max_msg), bool)
-    recv_mask = np.zeros((p, p, max_msg), bool)
-    send_idx[gi, gj, m_idx] = glv
-    recv_idx[gj, gi, m_idx] = glm
-    msg_mask[gi, gj, m_idx] = True
-    recv_mask[gj, gi, m_idx] = True
+    send_idx, recv_idx, msg_mask, recv_mask, max_msg = _exchange_tables(
+        vp, vcol, vv, vkeys, v_off, master_part,
+        p=p, N=N, max_v=max_v, pad_multiple=pad_multiple,
+    )
 
     return SubgraphSet(
         lsrc=jnp.asarray(lsrc),
@@ -240,6 +296,7 @@ def build_subgraphs(
         max_v=max_v,
         max_e=max_e,
         max_msg=max_msg,
+        addressing=addressing,
     )
 
 

@@ -52,7 +52,7 @@ from jax.sharding import PartitionSpec as P
 from repro.api.config import check_compute_backend
 from repro.compat import shard_map_compat
 from repro.core.metrics import max_mean_ratio
-from repro.graph.build import SubgraphSet
+from repro.graph.build import SubgraphSet, check_addressing
 from repro.kernels import ops
 
 INF_F32 = jnp.float32(3.0e38)
@@ -594,16 +594,18 @@ def _superstep(
 
 
 def check_int32_kernel_gid(prog: VertexProgram, gid: jax.Array, compute_backend: str) -> None:
-    """Refuse kernel backends for int32 programs with values >= 2^24.
+    """FLAT-addressing guard: refuse kernel backends for int32 programs
+    whose global-id space reaches 2^24.
 
     The kernel path runs the int32 semiring in f32, which is only exact for
     magnitudes below 2^24 — larger values would merge distinct CC/REACH
-    labels (or BFS hop counts) silently. `max(gid)` bounds every int32
+    labels (or BFS hop counts) silently. Under flat addressing the kernel
+    label domain IS the global id space, so `max(gid)` bounds every int32
     program's finite values: CC/REACH propagate the labels themselves, and
-    BFS hop counts are below the covered-vertex count <= max(gid)+1. All
-    three drivers — sim (`run_bsp`), batched (`run_bsp_batch` /
-    `compile_batch_executable`), and the distributed stepper — call this
-    before any f32 remap happens.
+    BFS hop counts are below the covered-vertex count <= max(gid)+1.
+    Two-level runs enforce at the VALUE boundary instead
+    (`check_int32_kernel_values` via `_kernel_value_boundary`), which is
+    what lets 2^24+-vertex graphs stay exact on ref/pallas.
     """
     check_compute_backend(compute_backend)
     if compute_backend != "xla" and prog.dtype == "int32":
@@ -616,9 +618,118 @@ def check_int32_kernel_gid(prog: VertexProgram, gid: jax.Array, compute_backend:
             )
 
 
+def check_int32_kernel_values(prog: VertexProgram, bound, compute_backend: str) -> None:
+    """TWO-LEVEL-addressing guard at the kernel VALUE boundary.
+
+    `bound` is the run's proven ceiling on every finite kernel value's
+    magnitude — the max over workers of per-worker local value maxima
+    (label-domain programs: the rank-codec size; unit-weight programs:
+    the covered-vertex count bounding hop growth). Same exactness rule
+    as `check_int32_kernel_gid`, applied to what the kernels actually
+    see instead of the global id space.
+    """
+    check_compute_backend(compute_backend)
+    if compute_backend != "xla" and prog.dtype == "int32":
+        bound = int(bound)
+        if bound >= 1 << 24:
+            raise ValueError(
+                f"compute_backend={compute_backend!r} runs int32 {prog.name} in f32, "
+                f"exact only for kernel values < 2^24; this run's per-worker value "
+                f"bound is {bound} — use compute_backend='xla'"
+            )
+
+
 def check_int32_kernel_labels(prog: VertexProgram, sub: SubgraphSet, compute_backend: str) -> None:
-    """`check_int32_kernel_gid` over a SubgraphSet's global-id table."""
+    """Addressing-aware kernel-boundary guard over a SubgraphSet.
+
+    Flat addressing keeps the legacy global-id guard. Two-level addressing
+    defers to the value boundary (`_kernel_value_boundary` in the drivers):
+    label-domain programs are rank-compressed below 2^24 there and the
+    guard checks per-worker value maxima, so a >= 2^24-vertex graph passes
+    clean where flat addressing must raise.
+    """
+    check_addressing(sub.addressing)
+    if sub.addressing == "flat":
+        check_int32_kernel_gid(prog, sub.gid, compute_backend)
+
+
+def _label_domain(prog: VertexProgram) -> bool:
+    """True for programs whose finite values form a CLOSED label set: the
+    semiring only ever min/max-combines values already present at init
+    (CC/REACH label propagation), never synthesizes new finite values.
+    Exactly these programs admit lossless rank compression."""
+    return (
+        prog.dtype == "int32"
+        and prog.weight == "none"
+        and prog.apply == "none"
+        and prog.local == "fixpoint"
+        and prog.combine in ("min", "max")
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class _ValueCodec:
+    """Order-preserving bijection between a closed finite label set and
+    dense int32 ranks [0, size), with the exec-domain INF_I32 sentinel
+    fixed. min/max, delta message counts, and no-change convergence
+    commute with any strictly monotone map, so a BSP run over encoded
+    values is step-for-step identical to the raw run — while the kernels
+    only ever see ranks < size <= covered vertices, far below 2^24 even
+    when the labels themselves are 2^24+ global ids."""
+
+    uniq: tuple  # sorted distinct finite exec-domain values (hashable)
+
+    @classmethod
+    def from_values(cls, values: np.ndarray) -> "_ValueCodec":
+        v = np.asarray(values)
+        finite = np.abs(v.astype(np.int64)) != int(INF_I32)
+        return cls(uniq=tuple(np.unique(v[finite]).tolist()))
+
+    @property
+    def size(self) -> int:
+        return len(self.uniq)
+
+    def _table(self) -> jax.Array:
+        return jnp.asarray(np.asarray(self.uniq, np.int32))
+
+    def encode(self, val: jax.Array) -> jax.Array:
+        finite = jnp.abs(val) != INF_I32
+        ranks = jnp.searchsorted(self._table(), val).astype(jnp.int32)
+        return jnp.where(finite, ranks, val)
+
+    def decode(self, val: jax.Array) -> jax.Array:
+        finite = jnp.abs(val) != INF_I32
+        idx = jnp.clip(val, 0, max(self.size - 1, 0))
+        return jnp.where(finite, self._table()[idx], val)
+
+
+def _kernel_value_boundary(
+    prog: VertexProgram, sub: SubgraphSet, val: jax.Array, compute_backend: str
+) -> tuple[jax.Array, Optional[_ValueCodec]]:
+    """Two-level enforcement where values cross into the kernels (exec
+    domain, i.e. after any max→min negation). Returns (kernel-ready
+    values, codec-or-None); callers decode driver output with the codec.
+
+    label-domain programs → rank-compress (bound = codec size); unit-weight
+    programs (BFS hops) → bound = current max + covered vertices; any other
+    int32 program falls back to the conservative global-id guard (its value
+    growth is unknown — use flat addressing if that guard is too strict).
+    """
+    if compute_backend == "xla" or prog.dtype != "int32" or sub.addressing == "flat":
+        return val, None
+    if _label_domain(prog):
+        codec = _ValueCodec.from_values(np.asarray(val))
+        check_int32_kernel_values(prog, max(codec.size - 1, 0), compute_backend)
+        return codec.encode(val), codec
+    if prog.weight == "unit":
+        covered = int(np.asarray(sub.is_master).sum())
+        vnp = np.abs(np.asarray(val).astype(np.int64))
+        finite = vnp != int(INF_I32)
+        base = int(vnp[finite].max()) if finite.any() else 0
+        check_int32_kernel_values(prog, base + covered, compute_backend)
+        return val, None
     check_int32_kernel_gid(prog, sub.gid, compute_backend)
+    return val, None
 
 
 # ------------------------------------------------------------ entry points
@@ -832,6 +943,9 @@ def run_bsp(
     # message counts and no-change convergence are negation-invariant.
     exec_prog, negate = _exec_view(prog)
     val = -init_val if negate else init_val
+    # Two-level runs rank-compress label-domain values here so the kernels
+    # only ever see ranks < 2^24; codec=None means values pass raw.
+    val, codec = _kernel_value_boundary(prog, sub, val, compute_backend)
     p = val.shape[0]
 
     if driver == "fused":
@@ -851,6 +965,8 @@ def run_bsp(
         # The run's single host sync: one device_get for every stat buffer.
         steps, msgs_sw, iters_sw, edges = jax.device_get((steps, msgs_buf, iters_buf, edges))
         steps = int(steps)
+        if codec is not None:
+            val = codec.decode(val)
         return (-val if negate else val), _assemble_stats(
             steps,
             msgs_sw[:steps].astype(np.int64),
@@ -884,6 +1000,8 @@ def run_bsp(
             break
     msgs_sw = np.asarray(msg_steps).reshape(steps, p)
     iters_sw = np.asarray(iters_steps).reshape(steps, p)
+    if codec is not None:
+        val = codec.decode(val)
     return (-val if negate else val), _assemble_stats(steps, msgs_sw, iters_sw, edges)
 
 
@@ -1051,12 +1169,18 @@ def run_bsp_batch(
         init_vals = batch_init(prog, sub, sources, batch=batch, num_vertices=num_vertices)
     exec_prog, negate = _exec_view(prog)
     vals = -init_vals if negate else init_vals
+    # One codec across the batch: the union of every query's finite values
+    # (source-free programs tile one init, so this matches the per-query
+    # codec exactly; ranks stay < covered either way).
+    vals, codec = _kernel_value_boundary(prog, sub, vals, compute_backend)
     vals, steps_q, msgs_buf, iters_buf, edges = _fused_bsp_batch(
         sub, vals, prog=exec_prog, max_supersteps=max_supersteps, inner_cap=inner_cap,
         tol=tol, num_vertices=num_vertices, backend=compute_backend, block_e=block_e,
     )
     DISPATCH_COUNTS["batch"] += 1
     steps_q, msgs_sbw, iters_sbw, edges = jax.device_get((steps_q, msgs_buf, iters_buf, edges))
+    if codec is not None:
+        vals = codec.decode(vals)
     return (-vals if negate else vals), _assemble_batch_stats(steps_q, msgs_sbw, iters_sbw, edges)
 
 
@@ -1077,6 +1201,7 @@ class BatchExecutable:
     negate: bool
     compiled: object
     compile_s: float
+    compute_backend: str = "xla"
 
     def run(self, init_vals: jax.Array) -> tuple[jax.Array, list]:
         """Same contract as `run_bsp_batch` (init_vals is donated)."""
@@ -1086,11 +1211,19 @@ class BatchExecutable:
                 "— pad the batch to its bucket first"
             )
         vals = -init_vals if self.negate else init_vals
+        # Per-call value boundary: the compiled program is shape-keyed, not
+        # value-keyed, so each batch brings its own codec (a host-side
+        # unique + searchsorted — no retrace, the dtype stays int32).
+        vals, codec = _kernel_value_boundary(
+            self.program, self.sub, vals, self.compute_backend
+        )
         vals, steps_q, msgs_buf, iters_buf, edges = self.compiled(self.sub, vals)
         DISPATCH_COUNTS["batch"] += 1
         steps_q, msgs_sbw, iters_sbw, edges = jax.device_get(
             (steps_q, msgs_buf, iters_buf, edges)
         )
+        if codec is not None:
+            vals = codec.decode(vals)
         return (
             -vals if self.negate else vals
         ), _assemble_batch_stats(steps_q, msgs_sbw, iters_sbw, edges)
@@ -1126,7 +1259,7 @@ def compile_batch_executable(
     ).compile()
     return BatchExecutable(
         program=prog, sub=sub, batch=int(batch), negate=negate, compiled=compiled,
-        compile_s=time.perf_counter() - t0,
+        compile_s=time.perf_counter() - t0, compute_backend=compute_backend,
     )
 
 
@@ -1139,7 +1272,7 @@ _ARRAY_FIELDS = [
     "gid", "vmask", "is_master", "out_degree",
     "send_idx", "recv_idx", "msg_mask", "recv_mask",
 ]
-_STATIC_FIELDS = ["num_parts", "max_v", "max_e", "max_msg"]
+_STATIC_FIELDS = ["num_parts", "max_v", "max_e", "max_msg", "addressing"]
 
 
 def subgraphs_to_arrays(sub: SubgraphSet) -> tuple[dict, dict]:
@@ -1262,14 +1395,28 @@ def make_distributed_stepper(
         out_specs=(spec2, P(axis_tuple), P(), P(None, axis_tuple), P(None, axis_tuple)),
     )
 
+    addressing = statics.get("addressing", "two_level")
+
     def runner(arrays: dict, val: jax.Array):
-        # Same 2^24 exactness guard as run_bsp/_resolve_batch_args: a
-        # too-large id must raise BEFORE any int->f32 remap. Under jit/AOT
-        # tracing gid is abstract and the guard cannot run here — those
-        # paths (GraphPipeline._run_distributed / lower) pre-check the
-        # concrete SubgraphSet before tracing.
+        # Same 2^24 exactness guard as run_bsp/_resolve_batch_args: an
+        # inexact run must raise BEFORE any int->f32 remap. Flat addressing
+        # bounds values by the global-id space; two-level checks the
+        # per-worker VALUE maxima of the incoming carry (label-domain
+        # callers encode to ranks first — GraphPipeline._run_distributed
+        # does — so big global labels pass as small ranks, and a raw
+        # unencoded 2^24+ label still raises). Under jit/AOT tracing the
+        # arrays are abstract and the guard cannot run here — those paths
+        # pre-check the concrete SubgraphSet before tracing.
         try:
-            check_int32_kernel_gid(prog, arrays["gid"], compute_backend)
+            if addressing == "flat":
+                check_int32_kernel_gid(prog, arrays["gid"], compute_backend)
+            elif compute_backend != "xla" and prog.dtype == "int32":
+                mag = jnp.abs(val)
+                finite = mag != INF_I32
+                bound = int(jnp.max(jnp.where(finite, mag, 0)))
+                if prog.weight == "unit":
+                    bound += int(jnp.sum(arrays["is_master"]))
+                check_int32_kernel_values(prog, bound, compute_backend)
         except jax.errors.JAXTypeError:
             pass
         out, msgs, steps, msgs_b, iters_b = sharded(arrays, -val if negate else val)

@@ -25,6 +25,17 @@ def _finalize(src, dst, V) -> Graph:
     return Graph(src=src, dst=dst, num_vertices=V)
 
 
+def _rmat_bitplane(src, dst, r, a: float, b: float, c: float):
+    """One R-MAT recursion level: descend every edge one quadrant using a
+    single uniform draw per edge. Shared by the in-memory generator
+    (plane-major draws) and the sharded writer in `repro.data.edgeshards`
+    (chunk-major draws)."""
+    ab, abc = a + b, a + b + c
+    src = src * 2 + (r >= ab)
+    dst = dst * 2 + ((r >= a) & (r < ab)) + (r >= abc)
+    return src, dst
+
+
 def rmat(
     num_vertices: int,
     num_edges: int,
@@ -41,11 +52,8 @@ def rmat(
     n = int(num_edges * 1.15)  # oversample to survive dedup
     src = np.zeros(n, dtype=np.int64)
     dst = np.zeros(n, dtype=np.int64)
-    ab, abc = a + b, a + b + c
     for _ in range(scale):
-        r = rng.random(n)
-        src = src * 2 + (r >= ab)
-        dst = dst * 2 + ((r >= a) & (r < ab)) + (r >= abc)
+        src, dst = _rmat_bitplane(src, dst, rng.random(n), a, b, c)
     g = _finalize(src, dst, num_vertices)
     if g.num_edges > num_edges:
         idx = rng.choice(g.num_edges, size=num_edges, replace=False)
@@ -55,7 +63,48 @@ def rmat(
 
 
 def barabasi(num_vertices: int, attach: int = 8, *, seed: int = 0) -> Graph:
-    """Barabasi-Albert preferential attachment (eta ~= 3)."""
+    """Barabasi-Albert preferential attachment (eta ~= 3).
+
+    Vectorized: the legacy sampler appended every edge to a Python list and
+    materialized the O(attach * V) `repeated` multiset just to index into it.
+    The multiset has a closed form — index i lives in block b = i // (2*attach)
+    with offset o = i % (2*attach); offsets < attach are that block's targets
+    row, offsets >= attach are the block's new vertex (attach + b) — so each
+    draw resolves with one gather into the (block, attach) targets table.
+    The per-iteration `rng.integers(0, len, attach)` call sequence is kept
+    verbatim, so the bit stream — and hence the graph — is identical to
+    `barabasi_legacy` for a fixed seed (pinned in tests)."""
+    rng = np.random.default_rng(seed)
+    blocks = num_vertices - attach
+    if blocks <= 0:
+        return _finalize(np.zeros(0, np.int64), np.zeros(0, np.int64), num_vertices)
+    two_a = 2 * attach
+    idx = np.empty((blocks, attach), np.int64)
+    idx[0] = np.arange(attach)  # unused; block 0's targets are fixed below
+    for b in range(1, blocks):
+        idx[b] = rng.integers(0, two_a * b, attach)
+    blk, off = idx // two_a, idx % two_a
+    # Entry e = b*attach + j is tg[b, j]. off >= attach resolves immediately
+    # to the block's new vertex; off < attach chains to an entry in an
+    # earlier block. Chains hop to uniformly-random earlier blocks, so
+    # pointer jumping resolves the whole forest in O(log depth) passes.
+    val = np.where(off >= attach, attach + blk, 0).ravel()
+    known = (off >= attach).ravel()
+    ee = np.arange(blocks * attach, dtype=np.int64)
+    parent = np.where(known, ee, (blk * attach + off).ravel())
+    val[:attach] = np.arange(attach)
+    known[:attach] = True
+    parent[:attach] = ee[:attach]
+    while not known.all():
+        val = np.where(known, val, val[parent])
+        known = known | known[parent]
+        parent = parent[parent]
+    src = np.repeat(np.arange(attach, num_vertices, dtype=np.int64), attach)
+    return _finalize(src, val, num_vertices)
+
+
+def barabasi_legacy(num_vertices: int, attach: int = 8, *, seed: int = 0) -> Graph:
+    """Original per-edge Python-list sampler; golden oracle for `barabasi`."""
     rng = np.random.default_rng(seed)
     targets = list(range(attach))
     repeated: list[int] = []

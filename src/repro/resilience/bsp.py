@@ -51,11 +51,13 @@ RESUME_META = "resume.json"
 class _SegState:
     """Host-side carry between segments (and across crash/resume)."""
 
-    val: np.ndarray  # [p, max_v+1] EXEC-domain value carry
+    val: np.ndarray  # [p, max_v+1] EXEC-domain value carry (rank-encoded
+    # when a two-level label-domain run carries a codec)
     done: int  # supersteps completed
     msgs: list  # list of [k, p] int64 per-segment message blocks
     iters: list  # list of [k, p] int64 per-segment inner-iter blocks
     converged: bool
+    codec: object = None  # engine._ValueCodec for two-level label programs
 
     def stack(self, p: int) -> tuple[np.ndarray, np.ndarray]:
         if not self.msgs:
@@ -70,16 +72,22 @@ def _sub_fingerprint(sub) -> dict:
         "max_v": int(sub.max_v),
         "max_e": int(sub.max_e),
         "max_msg": int(sub.max_msg),
+        "addressing": str(sub.addressing),
     }
 
 
 def _ckpt_tree(state: _SegState, p: int) -> dict:
     msgs, iters = state.stack(p)
+    # The rank codec's table rides in the snapshot: the carry holds ENCODED
+    # values, and the codec may have been built from a caller-supplied
+    # init_val that resume cannot re-derive.
+    uniq = np.asarray(state.codec.uniq if state.codec is not None else (), np.int32)
     return {
         "val": np.asarray(state.val),
         "msgs": msgs,
         "iters": iters,
         "converged": np.int32(state.converged),
+        "codec_uniq": uniq,
     }
 
 
@@ -180,8 +188,10 @@ def _run_segments(sub, exec_prog, negate, state: _SegState, *, max_supersteps,
     msgs_sw, iters_sw = state.stack(p)
     edges = np.asarray(sub.edge_mask.sum(axis=1), np.int64)
     stats = engine._assemble_stats(state.done, msgs_sw, iters_sw, edges)
-    val = jnp.asarray(-state.val if negate else state.val)
-    return val, stats
+    val = jnp.asarray(state.val)
+    if state.codec is not None:
+        val = state.codec.decode(val)
+    return (-val if negate else val), stats
 
 
 def _check_ft_args(checkpoint_every, ckpt_dir, exchange_period) -> None:
@@ -241,7 +251,12 @@ def run_bsp_resilient(
         init_val = prog.init(sub, num_vertices=num_vertices, source=source)
     exec_prog, negate = engine._exec_view(prog)
     val = -init_val if negate else init_val
-    state = _SegState(val=np.asarray(val), done=0, msgs=[], iters=[], converged=False)
+    # Same two-level value boundary as run_bsp: encode before the first
+    # segment so every checkpoint holds kernel-ready (encoded) values.
+    val, codec = engine._kernel_value_boundary(prog, sub, jnp.asarray(val), compute_backend)
+    state = _SegState(
+        val=np.asarray(val), done=0, msgs=[], iters=[], converged=False, codec=codec
+    )
     if checkpoint_every and ckpt_dir is not None:
         _write_meta(ckpt_dir, sub, prog, {
             "driver": driver, "compute_backend": compute_backend,
@@ -303,19 +318,38 @@ def resume_bsp(
         "msgs": np.zeros((0, 0), np.int64),
         "iters": np.zeros((0, 0), np.int64),
         "converged": np.int32(0),
+        "codec_uniq": np.zeros((0,), np.int32),
     }
     tree = ckpt.restore(d, step, like)
+    uniq = np.asarray(tree["codec_uniq"])
+    codec = engine._ValueCodec(uniq=tuple(int(x) for x in uniq)) if uniq.size else None
     state = _SegState(
         val=np.asarray(tree["val"]),
         done=int(step),
         msgs=[np.asarray(tree["msgs"], np.int64)],
         iters=[np.asarray(tree["iters"], np.int64)],
         converged=bool(int(tree["converged"])),
+        codec=codec,
     )
     if state.val.shape[0] != p:
         raise ValueError(
             f"checkpoint value carry has {state.val.shape[0]} workers, build has {p}"
         )
+    if (
+        codec is None
+        and backend != "xla"
+        and prog.dtype == "int32"
+        and sub.addressing == "two_level"
+    ):
+        # No codec rode along (BFS-style unit-weight carries raw hop counts):
+        # re-check the restored carry at the value boundary before resuming
+        # onto an f32 kernel backend.
+        mag = np.abs(state.val.astype(np.int64))
+        finite = mag != int(engine.INF_I32)
+        bound = int(mag[finite].max()) if finite.any() else 0
+        if prog.weight == "unit":
+            bound += int(np.asarray(sub.is_master).sum())
+        engine.check_int32_kernel_values(prog, bound, backend)
     return _run_segments(
         sub, exec_prog, negate, state,
         max_supersteps=int(meta["max_supersteps"]), inner_cap=int(meta["inner_cap"]),

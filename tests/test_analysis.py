@@ -152,10 +152,15 @@ def test_xd01_guarded_twin_passes():
 
 def test_xd01_would_have_caught_the_old_distributed_stepper():
     """The pre-fix engine (no guard in make_distributed_stepper) is the
-    checker's raison d'etre: rebuilding that shape must flag."""
+    checker's raison d'etre: rebuilding that shape must flag. The stepper
+    guards BOTH addressing modes — the flat gid guard and the two-level
+    value-boundary guard — so both calls must be neutralized before the
+    checker fires (either alone keeps the function guarded)."""
     engine = (REPO_ROOT / "src/repro/graph/engine.py").read_text()
     assert analyze_sources({"src/repro/graph/engine.py": engine}, select=["XD01"]) == []
     broken = engine.replace("check_int32_kernel_gid(prog, arrays[\"gid\"], compute_backend)", "pass")
+    assert analyze_sources({"src/repro/graph/engine.py": broken}, select=["XD01"]) == []
+    broken = broken.replace("check_int32_kernel_values(prog, bound, compute_backend)", "pass")
     fs = analyze_sources({"src/repro/graph/engine.py": broken}, select=["XD01"])
     assert codes(fs) == ["XD01"]
     assert fs[0].anchor == "make_distributed_stepper"

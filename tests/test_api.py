@@ -270,7 +270,9 @@ def test_abstract_spec_shapes():
     arrays, statics = spec.array_specs()
     assert arrays["lsrc"].shape == (4, 32)
     assert arrays["send_idx"].shape == (4, 4, 8)
-    assert statics == dict(num_parts=4, max_v=16, max_e=32, max_msg=8)
+    assert statics == dict(
+        num_parts=4, max_v=16, max_e=32, max_msg=8, addressing="two_level"
+    )
     assert spec.value_spec(CC).shape == (4, 17)
 
 

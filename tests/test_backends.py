@@ -170,12 +170,16 @@ def test_engine_rejects_unknown_backend(built_small):
 
 
 def test_cc_kernel_backend_rejects_huge_vertex_ids(built_small):
-    """int32 CC labels ride through f32 on the kernel backends — ids at or
-    above 2^24 would corrupt silently, so the driver must refuse them."""
+    """int32 CC labels ride through f32 on the kernel backends — under FLAT
+    addressing ids at or above 2^24 would corrupt silently, so the driver
+    must refuse them (two-level addressing rank-compresses instead;
+    tests/test_scale.py pins its clean passage)."""
     import dataclasses
 
     _, sub, _ = built_small
-    big = dataclasses.replace(sub, gid=jnp.where(sub.vmask, sub.gid + (1 << 24), sub.gid))
+    big = dataclasses.replace(
+        sub, gid=jnp.where(sub.vmask, sub.gid + (1 << 24), sub.gid), addressing="flat"
+    )
     with pytest.raises(ValueError, match="vertex ids"):
         alg.connected_components(big, compute_backend="ref")
     # the xla path holds full int32 precision and keeps working
@@ -190,7 +194,9 @@ def test_batch_kernel_backend_rejects_huge_vertex_ids(built_small):
     from repro.graph.engine import compile_batch_executable, run_bsp_batch
 
     _, sub, _ = built_small
-    big = dataclasses.replace(sub, gid=jnp.where(sub.vmask, sub.gid + (1 << 24), sub.gid))
+    big = dataclasses.replace(
+        sub, gid=jnp.where(sub.vmask, sub.gid + (1 << 24), sub.gid), addressing="flat"
+    )
     with pytest.raises(ValueError, match="vertex ids"):
         run_bsp_batch(big, "cc", batch=2, compute_backend="ref")
     with pytest.raises(ValueError, match="vertex ids"):
@@ -218,7 +224,9 @@ def test_distributed_stepper_rejects_huge_vertex_ids(small_powerlaw):
 
     res = PARTITIONERS["ebg"](small_powerlaw, 1)
     sub = build_subgraphs(small_powerlaw, res, symmetrize=True)
-    big = dataclasses.replace(sub, gid=jnp.where(sub.vmask, sub.gid + (1 << 24), sub.gid))
+    big = dataclasses.replace(
+        sub, gid=jnp.where(sub.vmask, sub.gid + (1 << 24), sub.gid), addressing="flat"
+    )
     mesh = make_mesh_compat((1,), ("workers",))
     arrays, statics = subgraphs_to_arrays(big)
     stepper = make_distributed_stepper(
